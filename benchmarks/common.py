@@ -1,0 +1,54 @@
+"""Shared benchmark plumbing: CSV rows + a consistent small-scale setup.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
+the figure's headline metric). Scales are CPU-sized but structurally
+identical to the paper's setup (set-associative caches, 10k-request
+resize intervals scaled down proportionally).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import EticaCache, EticaConfig, Geometry
+from repro.core.trace import interleave
+from repro.traces import make
+
+GEO = Geometry(num_sets=16, max_ways=32)
+RESIZE = 2_000
+PROMO = 500
+DRAM_CAP = 400
+SSD_CAP = 800
+REQS = 8_000
+SCALE = 0.25
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6
+
+
+def vm_mix(names, reqs=REQS, scale=SCALE):
+    traces = [make(n, reqs, seed=i, addr_offset=i * 10_000_000, scale=scale)
+              for i, n in enumerate(names)]
+    return interleave(traces, seed=42)
+
+
+def etica_config(mode="full", dram=DRAM_CAP, ssd=SSD_CAP):
+    return EticaConfig(dram_capacity=dram, ssd_capacity=ssd,
+                       geometry_dram=GEO, geometry_ssd=GEO,
+                       resize_interval=RESIZE, promo_interval=PROMO,
+                       mode=mode)

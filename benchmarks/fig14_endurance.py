@@ -1,0 +1,38 @@
+"""Paper Fig. 14: number of write operations committed to the SSD cache,
+ETICA vs ECI-Cache, per workload (paper: 33.8% fewer on average, up to
+95% for read-heavy web_3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EticaCache, make_eci_cache
+
+from .common import (DRAM_CAP, GEO, RESIZE, SSD_CAP, Timer, etica_config,
+                     row, vm_mix)
+
+VMS = ["web_3", "stg_1", "src2_0", "rsrch_0", "hm_1", "usr_0"]
+
+
+def main():
+    trace = vm_mix(VMS)
+    with Timer() as t1:
+        etica = EticaCache(etica_config("full"), len(VMS)).run(trace)
+    with Timer() as t2:
+        eci = make_eci_cache(DRAM_CAP + SSD_CAP, len(VMS), geometry=GEO,
+                             resize_interval=RESIZE).run(trace)
+    tot_e = tot_c = 0.0
+    for vm, re_, rc in zip(VMS, etica, eci):
+        tot_e += re_.ssd_writes
+        tot_c += rc.ssd_writes
+        red = 1 - re_.ssd_writes / max(rc.ssd_writes, 1)
+        row(f"fig14/{vm}", (t1.us + t2.us) / (2 * len(trace)),
+            f"etica_writes={re_.ssd_writes:.0f} "
+            f"eci_writes={rc.ssd_writes:.0f} reduction={red:.3f}")
+    row("fig14/summary", 0.0,
+        f"avg_ssd_write_reduction={1 - tot_e/max(tot_c,1):.3f} "
+        f"(paper: 0.338)")
+    return 1 - tot_e / max(tot_c, 1)
+
+
+if __name__ == "__main__":
+    main()

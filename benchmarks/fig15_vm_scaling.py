@@ -1,0 +1,50 @@
+"""Paper Figs. 15 & 16: cache reallocation and hit ratio as VMs come
+online (1 -> 2 -> 4 -> 8 VMs against a fixed total cache)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EticaCache, Trace
+from repro.traces import make
+
+from .common import Timer, etica_config, row
+
+PHASES = [1, 2, 4, 8]
+REQS_PER_PHASE = 4_000
+WORKLOADS = ["hm_1", "proj_0", "stg_1", "usr_0", "ts_0", "wdev_0",
+             "web_3", "src2_0"]
+
+
+def main():
+    num_vms = max(PHASES)
+    vm_traces = [make(w, REQS_PER_PHASE * len(PHASES), seed=i,
+                      addr_offset=i * 10_000_000, scale=0.25)
+                 for i, w in enumerate(WORKLOADS)]
+    cache = EticaCache(etica_config("full", dram=200, ssd=400), num_vms)
+    with Timer() as t:
+        for phase, active in enumerate(PHASES):
+            # interleave only the active VMs for this phase
+            chunks, vm_ids = [], []
+            for v in range(active):
+                seg = vm_traces[v][phase * REQS_PER_PHASE:
+                                   (phase + 1) * REQS_PER_PHASE]
+                chunks.append(np.asarray(seg.addr))
+                vm_ids.append(np.full(len(seg), v, np.int32))
+            rng = np.random.default_rng(phase)
+            order = rng.permutation(sum(len(c) for c in chunks))
+            addr = np.concatenate(chunks)[order]
+            wr = np.concatenate(
+                [np.asarray(vm_traces[v][phase * REQS_PER_PHASE:
+                                         (phase + 1) * REQS_PER_PHASE]
+                            .is_write) for v in range(active)])[order]
+            vm = np.concatenate(vm_ids)[order]
+            res = cache.run(Trace(addr=addr, is_write=wr, vm=vm))
+            hits = np.mean([r.hit_ratio for r in res[:active]])
+            allocs = [int(l.alloc.sum()) for l in cache.logs_ssd[-2:]]
+            row(f"fig15/phase_{active}vms", 0.0,
+                f"avg_hit={hits:.3f} ssd_alloc_total={allocs[-1]}")
+    row("fig15/total", t.us / (REQS_PER_PHASE * sum(PHASES)), "done")
+
+
+if __name__ == "__main__":
+    main()

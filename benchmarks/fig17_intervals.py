@@ -1,0 +1,34 @@
+"""Paper Fig. 17: impact of the promotion/eviction interval on ETICA's
+performance and endurance (interval swept 100 -> 10,000 requests; scaled
+here proportionally to the benchmark trace size)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EticaCache
+
+from .common import Timer, etica_config, row, vm_mix
+
+VMS = ["hm_1", "usr_0", "ts_0"]
+INTERVALS = [100, 250, 500, 1000, 2000]
+
+
+def main():
+    trace = vm_mix(VMS, reqs=6_000)
+    base = None
+    for iv in INTERVALS:
+        cfg = etica_config("full")
+        cfg.promo_interval = iv
+        with Timer() as t:
+            res = EticaCache(cfg, len(VMS)).run(trace)
+        lat = np.mean([r.mean_latency for r in res])
+        writes = sum(r.ssd_writes for r in res)
+        if base is None:
+            base = (lat, writes)
+        row(f"fig17/interval_{iv}", t.us / len(trace),
+            f"latency_norm={lat/base[0]:.3f} "
+            f"ssd_writes_norm={writes/max(base[1],1):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) parity + jnp-ref
+timing. On-TPU wall time is not measurable here; the derived column
+reports the kernel's arithmetic/byte characteristics used in §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.popularity.kernel import popularity
+from repro.kernels.popularity.ref import popularity_ref
+from repro.kernels.reuse_distance.kernel import count_between
+from repro.kernels.reuse_distance.ref import count_between_ref
+
+from .common import row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # reuse distance: N=4096 window (paper's 10k interval scaled)
+    n = 4096
+    prev = jnp.asarray(rng.integers(-1, n, n), jnp.int32)
+    touch = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    nt = jnp.asarray(rng.integers(0, n + 1, n), jnp.int32)
+    us_ref = _time(jax.jit(count_between_ref), prev, touch, nt)
+    got = count_between(prev, touch, nt)
+    want = count_between_ref(prev, touch, nt)
+    ok = bool((np.asarray(got) == np.asarray(want)).all())
+    row("kernels/reuse_distance_ref_n4096", us_ref,
+        f"pairwise_ops={n*n} kernel_matches_ref={ok}")
+
+    # popularity: N=8192 accesses, 1024 blocks
+    n, nb = 8192, 1024
+    dist = jnp.asarray(rng.integers(-1, 500, n), jnp.int32)
+    served = jnp.asarray(rng.integers(0, 2, n).astype(bool))
+    seg = jnp.asarray(rng.integers(0, nb, n), jnp.int32)
+    us_ref = _time(jax.jit(lambda d, s, g: popularity_ref(d, s, g, nb, 64.0)),
+                   dist, served, seg)
+    got = popularity(dist, served, seg, nb, 64.0)
+    want = popularity_ref(dist, served, seg, nb, 64.0)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-5))
+    row("kernels/popularity_ref_n8192", us_ref,
+        f"exp_evals={n} kernel_matches_ref={ok}")
+
+    # flash attention: B1 H4 S512 D64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    us_ref = _time(jax.jit(
+        lambda a, b, c: attention_ref(a, b, c, causal=True)), q, k, v)
+    got = flash_attention(q, k, v, causal=True, tq=128, tk=128)
+    want = attention_ref(q, k, v, causal=True)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=2e-5))
+    flops = 4 * 1 * 4 * 512 * 512 * 64
+    row("kernels/flash_attention_ref_s512", us_ref,
+        f"flops={flops} kernel_matches_ref={ok}")
+
+
+if __name__ == "__main__":
+    main()

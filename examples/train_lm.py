@@ -1,0 +1,52 @@
+"""End-to-end training example: a ~100M-parameter qwen3-family model for a
+few hundred steps with checkpointing, failure injection, and recovery.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is the driver deliverable (b): real data pipeline -> jitted train
+step (scan-over-layers + remat) -> AdamW -> async atomic checkpoints ->
+bounded-retry recovery; the loss should fall from ~10.8 (ln 49k) toward
+memorization of the synthetic stream.
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/etica_train_lm")
+    args = ap.parse_args()
+
+    # a ~100M-param qwen3-family config (8 layers, 768 wide, 32k vocab).
+    # CPU throughput is ~5 s/step at batch 4 x seq 256; pass --steps 60
+    # for a quick run.
+    import repro.configs.qwen3_4b as q
+    from repro import configs
+    cfg100m = dataclasses.replace(
+        q.CONFIG, name="qwen3-100m", num_layers=8, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2304,
+        vocab_size=32768)
+    configs._MODULES["qwen3-100m"] = None  # registered ad hoc below
+    get_orig = configs.get_reduced
+    configs.get_reduced = lambda a: cfg100m if a == "qwen3-100m" else get_orig(a)
+
+    total, _ = cfg100m.param_counts()
+    print(f"training {cfg100m.name}: {total/1e6:.0f}M params")
+    losses = train_main([
+        "--arch", "qwen3-100m", "--steps", str(args.steps),
+        "--batch", "4", "--seq", "256",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--inject-failure-at", str(args.steps // 2),
+        "--log-every", "20"])
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""ETICA core: the paper's contribution as composable JAX modules.
+
+Layering (bottom-up):
+
+  * :mod:`~repro.core.policies`  — write-policy semantics + device model.
+  * :mod:`~repro.core.trace`     — block-I/O trace pytrees.
+  * :mod:`~repro.core.reuse`     — TRD / URD / POD reuse-distance engine
+    and analytic miss-ratio curves (the TPU kernel's oracle).
+  * :mod:`~repro.core.popularity`— Eq. 1 popularity scoring.
+  * :mod:`~repro.core.partition` — PPC (Eq. 3) cache-space partitioning.
+  * :mod:`~repro.core.simulator` — exact set-associative datapath sims
+    (single-level + ETICA two-level) under ``lax.scan``.
+  * :mod:`~repro.core.controller`— interval-driven controllers (ETICA and
+    the shared one-level baseline chassis).
+  * :mod:`~repro.core.baselines` — ECI-Cache, Centaur, S-CAVE, vCacheShare.
+"""
+from .policies import LEVEL_LATENCY, Level, Policy, T_DRAM, T_HDD, T_SSD
+from .trace import Trace, interleave
+from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes, mrc, pod,
+                    pod_distances, trd, trd_distances, urd, urd_distances)
+from .popularity import PopularityTracker, block_scores, contributions
+from .partition import PartitionResult, partition
+from .simulator import (CacheState, Stats, capacity_to_ways, make_cache,
+                        simulate_single_level, simulate_two_level)
+from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
+                         PartitionedSingleLevelCache, SingleLevelConfig,
+                         VMResult)
+from .baselines import (make_centaur, make_eci_cache, make_scave,
+                        make_vcacheshare)
+
+__all__ = [
+    "LEVEL_LATENCY", "Level", "Policy", "T_DRAM", "T_HDD", "T_SSD",
+    "Trace", "interleave",
+    "DistResult", "demand_blocks", "hit_counts_at_sizes", "mrc", "pod",
+    "pod_distances", "trd", "trd_distances", "urd", "urd_distances",
+    "PopularityTracker", "block_scores", "contributions",
+    "PartitionResult", "partition",
+    "CacheState", "Stats", "capacity_to_ways", "make_cache",
+    "simulate_single_level", "simulate_two_level",
+    "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
+    "PartitionedSingleLevelCache", "SingleLevelConfig", "VMResult",
+    "make_centaur", "make_eci_cache", "make_scave", "make_vcacheshare",
+]

@@ -1,0 +1,368 @@
+"""Interval-driven cache controllers (the hypervisor-side brain).
+
+:class:`EticaCache` is the paper's full system: every ``resize_interval``
+requests it recomputes POD(RO)/POD(WBWO) per VM, re-partitions both cache
+levels via PPC, and resizes the per-VM caches; every ``promo_interval``
+requests it refreshes popularity scores and executes the
+promotion/eviction queues (pull-mode SSD maintenance, §4.2).
+
+:class:`PartitionedSingleLevelCache` is the shared chassis for the
+one-level baselines (ECI-Cache, Centaur, S-CAVE, vCacheShare) — they
+differ only in the sizing metric and the per-VM write-policy chooser (see
+``repro.core.baselines``).
+
+All datapath simulation happens in fixed-shape jitted ``lax.scan`` windows
+(padded with addr = -1 no-ops), so re-running 12 VMs x hundreds of
+intervals reuses one compiled executable per geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from . import popularity as pop
+from .partition import partition as _partition
+from . import reuse, simulator
+from .policies import Policy
+from .simulator import CacheState, Stats, capacity_to_ways, make_cache
+from .trace import Trace
+
+
+@dataclasses.dataclass
+class Geometry:
+    num_sets: int = 64
+    max_ways: int = 64
+
+    @property
+    def capacity(self) -> int:
+        return self.num_sets * self.max_ways
+
+
+@dataclasses.dataclass
+class IntervalLog:
+    """Per-interval record for the Fig. 10/15-style plots."""
+    demands: np.ndarray          # [V] blocks requested by the metric
+    alloc: np.ndarray            # [V] blocks granted
+    policies: list[str] | None = None
+
+
+@dataclasses.dataclass
+class VMResult:
+    stats: dict[str, float]
+    alloc_history: np.ndarray    # [intervals]
+
+    @property
+    def hit_ratio(self) -> float:
+        s = self.stats
+        return (s["read_hits_l1"] + s["read_hits_l2"] + s["write_hits_l2"]) / max(
+            s["reads"] + s["writes"], 1)
+
+    @property
+    def mean_latency(self) -> float:
+        return self.stats["latency_sum"] / max(
+            self.stats["reads"] + self.stats["writes"], 1)
+
+    def contended_latency(self, beta: float = 8.0) -> float:
+        """Mean latency under an SSD write-contention model.
+
+        Sustained writes trigger SSD garbage collection that inflates the
+        latency of *every* SSD access (well documented for NAND devices;
+        the paper's own premise is that performance degrades with
+        committed writes). Modeled as
+        ``t_ssd_eff = T_SSD * (1 + beta * write_share)`` applied to all
+        SSD accesses, with write_share = SSD writes / SSD accesses.
+        This couples the endurance win to a latency win — the regime the
+        paper's real-hardware numbers reflect."""
+        from .policies import T_SSD
+        s = self.stats
+        ssd_accesses = (s["read_hits_l2"] + s["write_hits_l2"]
+                        + s["cache_writes_l2"])
+        if ssd_accesses <= 0:
+            return self.mean_latency
+        write_share = s["cache_writes_l2"] / ssd_accesses
+        extra = ssd_accesses * T_SSD * beta * write_share
+        return (s["latency_sum"] + extra) / max(
+            s["reads"] + s["writes"], 1)
+
+    @property
+    def ssd_writes(self) -> float:
+        return self.stats["cache_writes_l2"]
+
+
+def _pad(addr: np.ndarray, is_write: np.ndarray, n: int):
+    k = n - addr.shape[0]
+    if k <= 0:
+        return addr[:n], is_write[:n]
+    return (np.concatenate([addr, np.full(k, -1, addr.dtype)]),
+            np.concatenate([is_write, np.zeros(k, bool)]))
+
+
+def _stats_to_dict(st: Stats) -> dict[str, float]:
+    return {k: float(v) for k, v in zip(Stats._fields, st)}
+
+
+def _acc(d: dict[str, float], st: Stats) -> None:
+    for k, v in zip(Stats._fields, st):
+        d[k] = d.get(k, 0.0) + float(v)
+
+
+def _mrc_grid(geom: Geometry, points: int = 17) -> np.ndarray:
+    ways = np.unique(np.round(np.linspace(0, geom.max_ways, points)).astype(int))
+    return (ways * geom.num_sets).astype(np.int64)
+
+
+def _expand_to_capacity(alloc: np.ndarray, counts: np.ndarray,
+                        capacity: int, geom: Geometry) -> np.ndarray:
+    """Distribute surplus capacity beyond instantaneous demand.
+
+    Paper Fig. 15/16: "ETICA increases the allocated cache to VM0, since
+    other VMs' demand is low" — spare space goes to VMs in proportion to
+    their request share (bounded by the per-VM geometry), so promotion
+    has room to build each VM's popular set beyond the strict POD demand.
+    """
+    left = capacity - int(alloc.sum())
+    if left <= 0 or counts.sum() == 0:
+        return alloc
+    share = counts / counts.sum()
+    extra = np.floor(left * share).astype(np.int64)
+    return np.minimum(alloc + extra, geom.capacity)
+
+
+# ---------------------------------------------------------------------------
+# ETICA (two-level)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EticaConfig:
+    dram_capacity: int               # total DRAM-level blocks across VMs
+    ssd_capacity: int                # total SSD-level blocks across VMs
+    geometry_dram: Geometry = dataclasses.field(default_factory=Geometry)
+    geometry_ssd: Geometry = dataclasses.field(default_factory=Geometry)
+    resize_interval: int = 10_000    # paper §5.1
+    promo_interval: int = 1_000      # paper §5.3
+    promo_frac: float = 0.05         # paper §4.2.1: top/bottom 5%
+    evict_frac: float = 0.05
+    popularity_decay: float = 0.5
+    mode: str = "full"               # "full" | "npe"
+    mrc_points: int = 17
+
+
+class EticaCache:
+    """The proposed system: DRAM(RO) + SSD(WBWO), POD sizing, PPC
+    partitioning, popularity-driven promotion/eviction."""
+
+    def __init__(self, cfg: EticaConfig, num_vms: int):
+        self.cfg = cfg
+        self.num_vms = num_vms
+        gd, gs = cfg.geometry_dram, cfg.geometry_ssd
+        self.dram = [make_cache(gd.num_sets, gd.max_ways) for _ in range(num_vms)]
+        self.ssd = [make_cache(gs.num_sets, gs.max_ways) for _ in range(num_vms)]
+        self.ways_dram = np.zeros(num_vms, np.int32)
+        self.ways_ssd = np.zeros(num_vms, np.int32)
+        self.t = np.zeros(num_vms, np.int64)
+        self.trackers = [pop.PopularityTracker(cfg.popularity_decay)
+                         for _ in range(num_vms)]
+        self.stats = [dict() for _ in range(num_vms)]
+        self.logs_dram: list[IntervalLog] = []
+        self.logs_ssd: list[IntervalLog] = []
+
+    # -- sizing -----------------------------------------------------------
+    def _size_level(self, subs: list[Trace], policy: Policy, geom: Geometry,
+                    capacity: int):
+        grid = _mrc_grid(geom, self.cfg.mrc_points)
+        demands = np.zeros(self.num_vms, np.int64)
+        curves = np.zeros((self.num_vms, grid.size))
+        dists = []
+        for v, sub in enumerate(subs):
+            if len(sub) == 0:
+                dists.append(None)
+                continue
+            r = reuse.pod_distances(sub.addr, sub.is_write, policy)
+            dists.append(r)
+            demands[v] = min(reuse.demand_blocks(int(r.max)), geom.capacity)
+            hits = reuse.hit_counts_at_sizes(r.dist, r.served, grid)
+            curves[v] = np.asarray(hits, np.float64) / max(len(sub), 1)
+        res = _partition(demands, curves, grid, capacity)
+        counts = np.array([len(s) for s in subs], np.float64)
+        alloc = _expand_to_capacity(res.alloc, counts, capacity, geom)
+        return alloc, demands, dists
+
+    # -- maintenance --------------------------------------------------------
+    def _maintain(self, v: int, window: Trace) -> None:
+        """Popularity refresh + promotion/eviction queues (paper §4.2)."""
+        cfg = self.cfg
+        if len(window) == 0:
+            return
+        alloc_blocks = int(self.ways_ssd[v]) * cfg.geometry_ssd.num_sets
+        # Eq. 1 sums over ALL re-references (paper: "POD(i,t) is the POD of
+        # B_i in the t-th access") — write re-references included, so
+        # write-hot blocks (usr_0-style workloads) become popular and get
+        # promoted into the WBWO SSD where subsequent writes hit.
+        r = reuse.trd_distances(window.addr, window.is_write)
+        contrib = pop.contributions(r.dist, r.served, max(alloc_blocks, 1))
+        self.trackers[v].update(np.asarray(window.addr), np.asarray(contrib))
+
+        ssd_res = simulator.resident_blocks(self.ssd[v], int(self.ways_ssd[v]))
+        # eviction queue: least popular 5% of SSD-resident blocks — only
+        # once the partition is near-full (an empty cache has nothing
+        # worth churning; paper evicts to make room for promotions)
+        if ssd_res.size and ssd_res.size >= 0.9 * alloc_blocks:
+            evict = self.trackers[v].least_popular(ssd_res, cfg.evict_frac)
+            if evict.size:
+                self.ssd[v], flushed = simulator.evict_blocks(self.ssd[v], evict)
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + flushed)
+        # promotion queue: the most popular blocks known to the tracker
+        # that lack an SSD copy (paper: "the most popular 5% of the data
+        # blocks in disk subsystem"), drained up to the free space
+        residents = simulator.resident_blocks(self.ssd[v],
+                                              int(self.ways_ssd[v]))
+        free = max(alloc_blocks - residents.size, 0)
+        if free:
+            promote = self.trackers[v].top_known(residents, free)
+            if promote.size:
+                self.ssd[v], n = simulator.promote_blocks(
+                    self.ssd[v], promote, int(self.ways_ssd[v]), int(self.t[v]))
+                # each promotion = 1 disk read + 1 SSD write (endurance cost)
+                self.stats[v]["cache_writes_l2"] = (
+                    self.stats[v].get("cache_writes_l2", 0.0) + n)
+                self.stats[v]["disk_reads"] = (
+                    self.stats[v].get("disk_reads", 0.0) + n)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, trace: Trace) -> list[VMResult]:
+        cfg = self.cfg
+        alloc_hist = [[] for _ in range(self.num_vms)]
+        for window in trace.intervals(cfg.resize_interval):
+            subs = [window.for_vm(v) if window.vm is not None else window
+                    for v in range(self.num_vms)]
+            # 1) POD sizing + PPC partitioning at both levels (§4.3)
+            alloc_d, dem_d, _ = self._size_level(
+                subs, Policy.RO, cfg.geometry_dram, cfg.dram_capacity)
+            alloc_s, dem_s, _ = self._size_level(
+                subs, Policy.WBWO, cfg.geometry_ssd, cfg.ssd_capacity)
+            self.logs_dram.append(IntervalLog(dem_d, alloc_d))
+            self.logs_ssd.append(IntervalLog(dem_s, alloc_s))
+            # 2) resize (flushing dirty blocks on shrink)
+            for v in range(self.num_vms):
+                wd = int(capacity_to_ways(int(alloc_d[v]),
+                                          cfg.geometry_dram.num_sets,
+                                          cfg.geometry_dram.max_ways))
+                ws = int(capacity_to_ways(int(alloc_s[v]),
+                                          cfg.geometry_ssd.num_sets,
+                                          cfg.geometry_ssd.max_ways))
+                self.dram[v], _ = simulator.resize(
+                    self.dram[v], int(self.ways_dram[v]), wd)
+                self.ssd[v], flushed = simulator.resize(
+                    self.ssd[v], int(self.ways_ssd[v]), ws)
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + flushed)
+                self.ways_dram[v], self.ways_ssd[v] = wd, ws
+                alloc_hist[v].append(int(alloc_d[v] + alloc_s[v]))
+            # 3) datapath simulation in promo-interval chunks + maintenance
+            for v in range(self.num_vms):
+                sub = subs[v]
+                for chunk in sub.intervals(cfg.promo_interval):
+                    a, w = _pad(np.asarray(chunk.addr, np.int32),
+                                np.asarray(chunk.is_write), cfg.promo_interval)
+                    self.dram[v], self.ssd[v], st, t_end = \
+                        simulator.simulate_two_level(
+                            a, w, self.dram[v], self.ssd[v],
+                            int(self.ways_dram[v]), int(self.ways_ssd[v]),
+                            mode=cfg.mode, t0=int(self.t[v]))
+                    self.t[v] = int(t_end)
+                    _acc(self.stats[v], st)
+                    if cfg.mode == "full":
+                        self._maintain(v, chunk)
+        return [VMResult(dict(self.stats[v]),
+                         np.asarray(alloc_hist[v], np.int64))
+                for v in range(self.num_vms)]
+
+
+# ---------------------------------------------------------------------------
+# shared chassis for one-level partitioned baselines
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SingleLevelConfig:
+    capacity: int
+    geometry: Geometry = dataclasses.field(default_factory=Geometry)
+    resize_interval: int = 10_000
+    sim_chunk: int = 1_000
+    mrc_points: int = 17
+
+
+MetricFn = Callable[[Trace], tuple[int, np.ndarray, np.ndarray]]
+# returns (demand_blocks, grid_sizes, hit_curve)
+PolicyFn = Callable[[Trace], Policy]
+
+
+class PartitionedSingleLevelCache:
+    """One SSD cache level, partitioned across VMs per a sizing metric.
+
+    ECI-Cache = URD metric + dynamic WB/RO policy; Centaur = TRD + WB;
+    S-CAVE = WSS + WT; vCacheShare = reuse-intensity + RO. Push-mode
+    datapath (allocates on every miss the policy admits) — exactly the
+    behavior the paper criticizes in §2.1.
+    """
+
+    def __init__(self, cfg: SingleLevelConfig, num_vms: int,
+                 metric: MetricFn, policy_fn: PolicyFn):
+        self.cfg = cfg
+        self.num_vms = num_vms
+        self.metric = metric
+        self.policy_fn = policy_fn
+        g = cfg.geometry
+        self.caches = [make_cache(g.num_sets, g.max_ways) for _ in range(num_vms)]
+        self.ways = np.zeros(num_vms, np.int32)
+        self.t = np.zeros(num_vms, np.int64)
+        self.stats = [dict() for _ in range(num_vms)]
+        self.logs: list[IntervalLog] = []
+
+    def run(self, trace: Trace) -> list[VMResult]:
+        cfg = self.cfg
+        alloc_hist = [[] for _ in range(self.num_vms)]
+        for window in trace.intervals(cfg.resize_interval):
+            subs = [window.for_vm(v) if window.vm is not None else window
+                    for v in range(self.num_vms)]
+            demands = np.zeros(self.num_vms, np.int64)
+            grid = _mrc_grid(cfg.geometry, cfg.mrc_points)
+            curves = np.zeros((self.num_vms, grid.size))
+            policies = []
+            for v, sub in enumerate(subs):
+                policies.append(self.policy_fn(sub) if len(sub) else Policy.WB)
+                if len(sub) == 0:
+                    continue
+                d, g_, c_ = self.metric(sub)
+                demands[v] = min(d, cfg.geometry.capacity)
+                curves[v] = np.interp(grid, g_, c_)
+            res = _partition(demands, curves, grid, cfg.capacity)
+            counts = np.array([len(s) for s in subs], np.float64)
+            alloc = _expand_to_capacity(res.alloc, counts, cfg.capacity,
+                                        cfg.geometry)
+            self.logs.append(IntervalLog(demands, alloc,
+                                         [p.value for p in policies]))
+            for v in range(self.num_vms):
+                w = int(capacity_to_ways(int(alloc[v]),
+                                         cfg.geometry.num_sets,
+                                         cfg.geometry.max_ways))
+                self.caches[v], flushed = simulator.resize(
+                    self.caches[v], int(self.ways[v]), w)
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + flushed)
+                self.ways[v] = w
+                alloc_hist[v].append(int(alloc[v]))
+                sub = subs[v]
+                for chunk in sub.intervals(cfg.sim_chunk):
+                    a, wr = _pad(np.asarray(chunk.addr, np.int32),
+                                 np.asarray(chunk.is_write), cfg.sim_chunk)
+                    self.caches[v], st, t_end = simulator.simulate_single_level(
+                        a, wr, self.caches[v], int(self.ways[v]),
+                        policies[v], t0=int(self.t[v]))
+                    self.t[v] = int(t_end)
+                    _acc(self.stats[v], st)
+        return [VMResult(dict(self.stats[v]),
+                         np.asarray(alloc_hist[v], np.int64))
+                for v in range(self.num_vms)]

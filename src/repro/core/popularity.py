@@ -1,0 +1,103 @@
+"""Popularity detection (paper §4.2.1, Eq. 1).
+
+    popularity(B_i) = sum_t exp(-POD(i, t) / cacheSize)
+
+Per-access contributions are computed in JAX (``contributions`` is what
+``repro.kernels.popularity`` fuses on TPU); the running per-block scores
+live in a host-side tracker updated asynchronously at maintenance points,
+exactly as the paper computes popularity off the I/O path. Cold accesses
+(no finite POD) contribute 0 — a block becomes popular only through
+re-references, which encodes both temporal locality (small POD) and
+frequency (the sum over accesses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def contributions(dist: jax.Array, served: jax.Array, cache_size) -> jax.Array:
+    """Eq. 1 per-access popularity contribution."""
+    cs = jnp.maximum(jnp.float32(cache_size), 1.0)
+    d = dist.astype(jnp.float32)
+    return jnp.where(served & (dist >= 0), jnp.exp(-d / cs), 0.0)
+
+
+def block_scores(addr: np.ndarray, contrib: np.ndarray):
+    """Aggregate per-access contributions into per-block scores."""
+    addr = np.asarray(addr)
+    uniq, inv = np.unique(addr, return_inverse=True)
+    scores = np.zeros(uniq.shape[0], np.float64)
+    np.add.at(scores, inv, np.asarray(contrib, np.float64))
+    return uniq, scores
+
+
+class PopularityTracker:
+    """Running per-block popularity with exponential aging across windows.
+
+    8 bytes/page in the paper; here a host dict keyed by block address —
+    the same asymptotic overhead, kept off the datapath.
+    """
+
+    def __init__(self, decay: float = 0.5):
+        self.decay = float(decay)
+        self._scores: dict[int, float] = {}
+
+    def update(self, addr: np.ndarray, contrib: np.ndarray) -> None:
+        for k in list(self._scores):
+            self._scores[k] *= self.decay
+        uniq, scores = block_scores(addr, contrib)
+        for a, s in zip(uniq.tolist(), scores.tolist()):
+            self._scores[a] = self._scores.get(a, 0.0) + s
+        # drop negligible entries to bound memory (paper: 0.15% overhead)
+        if len(self._scores) > 1_000_000:
+            thr = np.percentile(list(self._scores.values()), 10)
+            self._scores = {k: v for k, v in self._scores.items() if v > thr}
+
+    def score(self, addr: int) -> float:
+        return self._scores.get(int(addr), 0.0)
+
+    def scores_for(self, addrs: np.ndarray) -> np.ndarray:
+        return np.array([self._scores.get(int(a), 0.0) for a in np.asarray(addrs)])
+
+    def most_popular(self, candidates: np.ndarray, frac: float,
+                     limit: int | None = None) -> np.ndarray:
+        """Top-``frac`` of ``candidates`` by popularity (promotion queue).
+        ``limit`` widens the queue up to the free space available — the
+        paper drains the promotion queue "only when there is free space
+        in SSD", so a mostly-empty cache admits more than the 5% floor."""
+        candidates = np.asarray(candidates)
+        if candidates.size == 0:
+            return candidates
+        s = self.scores_for(candidates)
+        k = max(int(np.ceil(frac * candidates.size)), 1)
+        if limit is not None:
+            k = min(max(k, limit), candidates.size)
+        order = np.argsort(-s, kind="stable")
+        top = order[:k]
+        return candidates[top[s[top] > 0]]
+
+    def top_known(self, exclude: np.ndarray, limit: int) -> np.ndarray:
+        """Highest-scored blocks the tracker knows about that are not in
+        ``exclude`` — the paper's promotion queue draws from the full
+        popularity table of disk-resident blocks, not only the current
+        window's accesses."""
+        if limit <= 0 or not self._scores:
+            return np.empty(0, np.int64)
+        excl = set(int(a) for a in np.asarray(exclude))
+        items = [(s, a) for a, s in self._scores.items()
+                 if s > 0 and a not in excl]
+        items.sort(reverse=True)
+        return np.array([a for _, a in items[:limit]], np.int64)
+
+    def least_popular(self, candidates: np.ndarray, frac: float) -> np.ndarray:
+        """Bottom-``frac`` of ``candidates`` (eviction queue)."""
+        candidates = np.asarray(candidates)
+        if candidates.size == 0:
+            return candidates
+        s = self.scores_for(candidates)
+        k = max(int(np.ceil(frac * candidates.size)), 1)
+        order = np.argsort(s, kind="stable")
+        return candidates[order[:k]]

@@ -1,0 +1,283 @@
+"""Reuse-distance engine: TRD, URD, and the paper's POD metric (§4.3.1).
+
+All three metrics are instances of one computation over a *policy-filtered
+sub-trace*:
+
+  * ``touch[j]``  — access j inserts-or-hits the cache under the policy and
+    therefore both occupies a block and refreshes its LRU position.
+  * ``served[i]`` — access i would hit an infinite cache under the policy
+    (these are the accesses whose distances matter for sizing; per the
+    paper, only *read* accesses count toward sizing in every policy).
+  * ``dist[i]``   — for served i: the number of DISTINCT addresses touched
+    strictly between ``p(i)`` (the previous touch of ``addr[i]``) and i.
+    Blocks invalidated in the window still count until their next touch
+    (a conservative upper bound; the paper's worked examples are exact).
+
+Then  ``metric = max(dist[served])``  and the allocation is ``metric + 1``
+blocks (0 if nothing is served).
+
+Policy filters (paper §4.3.1 key ideas 1-4):
+
+  * TRD        : touch = all,           served = any re-access (R or W)
+  * URD        : touch = all,           served = RAR + RAW reads
+  * POD(WB/WT) : identical to URD.
+  * POD(RO)    : touch = reads,         served = reads whose previous access
+                 to the same address is a read (writes invalidate).
+  * POD(WBWO)  : touch = writes + served reads,
+                 served = reads with an earlier write to the same address
+                 (RAW and, transitively, RARAW).
+
+The pairwise distinct-count is O(N·N) with tiny constants — it is exactly
+the windowed-counting computation that ``repro.kernels.reuse_distance``
+tiles for TPU (this module is the oracle the kernel is tested against; the
+kernel is used by ``ops.reuse_distances`` when running on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .policies import Policy
+
+COLD = jnp.int32(-1)  # sentinel distance for cold / not-served accesses
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DistResult:
+    """Per-access reuse-distance decomposition."""
+
+    dist: jax.Array     # int32 [N]; -1 where not served
+    served: jax.Array   # bool  [N]; access would hit an infinite cache
+    touch: jax.Array    # bool  [N]; access occupies/refreshes a block
+
+    def tree_flatten(self):
+        return (self.dist, self.served, self.touch), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def max(self) -> jax.Array:
+        return jnp.max(jnp.where(self.served, self.dist, COLD))
+
+
+# ---------------------------------------------------------------------------
+# prev/next same-address helpers (sort-based, O(N log N))
+# ---------------------------------------------------------------------------
+
+def _prev_same(addr: jax.Array, mask: jax.Array) -> jax.Array:
+    """prev[i] = largest j < i with addr[j] == addr[i] and mask[j]; else -1.
+
+    Defined for every i (masked or not): the previous *masked* occurrence.
+    """
+    n = addr.shape[0]
+    # Stable sort by address keeps original index order within each address
+    # run; a scan down the sorted sequence then yields, for every position
+    # (masked or not), the nearest *masked* predecessor in its run.
+    order = jnp.argsort(addr, stable=True)
+    s_addr = addr[order]
+    s_mask = mask[order]
+    s_idx = order.astype(jnp.int32)
+
+    def body(carry, x):
+        last_addr, last_masked = carry
+        a, m, i = x
+        same_run = a == last_addr
+        prev_m = jnp.where(same_run, last_masked, -1)
+        new_last = jnp.where(m, i, prev_m)
+        return (a, new_last), prev_m
+
+    (_, _), prev_sorted = jax.lax.scan(
+        body, (jnp.int32(-(2**31) + 1), jnp.int32(-1)), (s_addr, s_mask, s_idx)
+    )
+    return jnp.zeros(n, dtype=jnp.int32).at[order].set(prev_sorted)
+
+
+def _next_same(addr: jax.Array, mask: jax.Array) -> jax.Array:
+    """next[i] = smallest j > i with addr[j]==addr[i] and mask[j]; else N."""
+    n = addr.shape[0]
+    rev_prev = _prev_same(addr[::-1], mask[::-1])
+    # index transform: position i in reversed array is n-1-i originally
+    nxt = jnp.where(rev_prev[::-1] >= 0, n - 1 - rev_prev[::-1], n)
+    return nxt.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# distinct-count between previous touch and current access
+# ---------------------------------------------------------------------------
+
+def _count_between(prev_touch: jax.Array, touch: jax.Array,
+                   next_touch: jax.Array, chunk: int = 256) -> jax.Array:
+    """count[i] = #{ j : prev_touch[i] < j < i, touch[j], next_touch[j] >= i }.
+
+    Each qualifying j is the LAST touch of its address inside the window,
+    so the count equals the number of distinct addresses touched in the
+    window. O(N^2) pairwise, evaluated in row chunks.
+    """
+    n = touch.shape[0]
+    j = jnp.arange(n, dtype=jnp.int32)
+    tj = touch
+    ntj = next_touch
+
+    def rows(i_block):
+        i = i_block  # [chunk]
+        p = prev_touch[i]  # [chunk]
+        m = (
+            (j[None, :] > p[:, None])
+            & (j[None, :] < i[:, None])
+            & tj[None, :]
+            & (ntj[None, :] >= i[:, None])
+        )
+        return jnp.sum(m, axis=1, dtype=jnp.int32)
+
+    pad = (-n) % chunk
+    i_all = jnp.arange(n + pad, dtype=jnp.int32).reshape(-1, chunk)
+    i_all = jnp.minimum(i_all, n - 1)
+    counts = jax.lax.map(rows, i_all).reshape(-1)[:n]
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# per-policy decomposition
+# ---------------------------------------------------------------------------
+
+def _decompose(addr: jax.Array, is_write: jax.Array, policy: Policy,
+               *, sizing_reads_only: bool = True,
+               chunk: int = 256) -> DistResult:
+    addr = addr.astype(jnp.int32)
+    is_read = ~is_write
+    all_mask = jnp.ones_like(is_write)
+
+    prev_any = _prev_same(addr, all_mask)
+    has_prev = prev_any >= 0
+
+    if policy in (Policy.WB, Policy.WT):
+        touch = all_mask
+        served = is_read & has_prev
+    elif policy is Policy.RO:
+        touch = is_read
+        prev_is_read = jnp.where(has_prev, ~is_write[jnp.maximum(prev_any, 0)], False)
+        served = is_read & prev_is_read
+    elif policy in (Policy.WBWO, Policy.WO):
+        prev_write = _prev_same(addr, is_write)
+        served = is_read & (prev_write >= 0)
+        touch = is_write | served
+    else:  # pragma: no cover
+        raise ValueError(policy)
+
+    prev_touch = _prev_same(addr, touch)
+    next_touch = _next_same(addr, touch)
+    dist = _count_between(prev_touch, touch, next_touch, chunk=chunk)
+    if not sizing_reads_only:
+        served = served | (is_write & has_prev)
+    dist = jnp.where(served, dist, COLD)
+    return DistResult(dist=dist, served=served, touch=touch)
+
+
+# Public API ----------------------------------------------------------------
+#
+# Inputs are padded up to power-of-two buckets with trailing writes to
+# fresh, never-reused addresses. Appended accesses sit after every real
+# access, so no real (p, i) window contains them; they themselves are
+# cold writes (never "served"); and as WBWO touches they only ever occupy
+# positions after all real windows. Hence bucketing is exact while keeping
+# the number of distinct jit shapes logarithmic.
+
+_PAD_BASE = np.int32(2**30)
+
+
+def _bucket(n: int, min_size: int = 256) -> int:
+    return max(min_size, 1 << (n - 1).bit_length())
+
+
+def _pad_trace(addr, is_write):
+    addr = np.asarray(addr, np.int32)
+    is_write = np.asarray(is_write, bool)
+    n = addr.shape[0]
+    b = _bucket(n)
+    if b == n:
+        return addr, is_write, n
+    k = b - n
+    pad_addr = _PAD_BASE + np.arange(k, dtype=np.int32)
+    return (np.concatenate([addr, pad_addr]),
+            np.concatenate([is_write, np.ones(k, bool)]), n)
+
+
+_decompose_jit = jax.jit(
+    _decompose, static_argnames=("policy", "sizing_reads_only", "chunk"))
+
+
+def _slice(r: DistResult, n: int) -> DistResult:
+    return DistResult(dist=r.dist[:n], served=r.served[:n], touch=r.touch[:n])
+
+
+def pod_distances(addr, is_write, policy: Policy, chunk: int = 256) -> DistResult:
+    """POD decomposition for a policy (paper §4.3.1)."""
+    a, w, n = _pad_trace(addr, is_write)
+    return _slice(_decompose_jit(a, w, policy, chunk=chunk), n)
+
+
+def urd_distances(addr, is_write, chunk: int = 256) -> DistResult:
+    """URD (ECI-Cache): read re-references over WB content semantics."""
+    a, w, n = _pad_trace(addr, is_write)
+    return _slice(_decompose_jit(a, w, Policy.WB, chunk=chunk), n)
+
+
+def trd_distances(addr, is_write, chunk: int = 256) -> DistResult:
+    """Traditional reuse distance: every re-access counts (Centaur)."""
+    a, w, n = _pad_trace(addr, is_write)
+    return _slice(
+        _decompose_jit(a, w, Policy.WB, sizing_reads_only=False, chunk=chunk), n)
+
+
+def pod(trace, policy: Policy) -> int:
+    """max POD of a trace under ``policy`` (−1 if nothing is served)."""
+    r = pod_distances(jnp.asarray(trace.addr), jnp.asarray(trace.is_write), policy)
+    return int(r.max)
+
+
+def urd(trace) -> int:
+    r = urd_distances(jnp.asarray(trace.addr), jnp.asarray(trace.is_write))
+    return int(r.max)
+
+
+def trd(trace) -> int:
+    r = trd_distances(jnp.asarray(trace.addr), jnp.asarray(trace.is_write))
+    return int(r.max)
+
+
+def demand_blocks(metric_value: int) -> int:
+    """Cache size (blocks) implied by a max reuse distance (paper: POD+1)."""
+    return int(metric_value) + 1 if metric_value >= 0 else 0
+
+
+# ---------------------------------------------------------------------------
+# Miss-ratio curves (analytic path)
+# ---------------------------------------------------------------------------
+
+def hit_counts_at_sizes(dist, served, sizes) -> np.ndarray:
+    """hits[s] = #served accesses with dist < sizes[s] (LRU inclusion).
+
+    Host-side analytics (variable shapes); the heavy part — computing the
+    distances — is the jitted/kernelized piece upstream.
+    """
+    d = np.where(np.asarray(served), np.asarray(dist), np.int32(2**30))
+    return np.sum(d[None, :] < np.asarray(sizes)[:, None], axis=1, dtype=np.int64)
+
+
+def mrc(trace, policy: Policy, sizes: np.ndarray) -> np.ndarray:
+    """Hit-ratio curve H(c) for the trace under ``policy`` at ``sizes``.
+
+    By LRU stack inclusion, a served access hits iff its policy-filtered
+    stack distance is < allocated blocks. Ratio is over *all* requests, so
+    curves are comparable across policies.
+    """
+    r = pod_distances(jnp.asarray(trace.addr), jnp.asarray(trace.is_write), policy)
+    hits = hit_counts_at_sizes(r.dist, r.served, jnp.asarray(sizes, jnp.int32))
+    return np.asarray(hits, dtype=np.float64) / max(len(trace), 1)

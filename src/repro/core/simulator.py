@@ -1,0 +1,360 @@
+"""Trace-driven cache simulators (exact datapath, `jax.lax.scan`).
+
+Two entry points:
+
+  * :func:`simulate_single_level` — one cache device in front of the disk
+    under any :class:`~repro.core.policies.Policy` (used for the paper's
+    motivational Fig. 3 study and the one-level baselines ECI-Cache,
+    Centaur, S-CAVE, vCacheShare).
+  * :func:`simulate_two_level` — ETICA's DRAM(RO) + SSD(WBWO) hierarchy
+    (paper §4.1/§4.2), in ``"full"`` (pull-mode SSD: misses never update
+    the SSD on the datapath) or ``"npe"`` (no promotion/eviction: write
+    misses allocate in the SSD datapath) modes.
+
+Caches are set-associative (paper: 512-block sets; geometry configurable).
+The *allocated* capacity of a VM's cache is expressed as active ways —
+resizing between intervals activates/deactivates ways (deactivation
+flushes dirty blocks, counted as disk writes). All datapath state is a
+pytree scanned over the request stream, so a full interval simulates as
+one fused XLA loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .policies import Policy, T_DRAM, T_HDD, T_HDD_WRITE, T_SSD
+
+
+class CacheState(NamedTuple):
+    tags: jax.Array   # int32 [S, W], -1 = invalid
+    lru: jax.Array    # int32 [S, W], last-touch time (-1 = never)
+    dirty: jax.Array  # bool  [S, W]
+
+
+class Stats(NamedTuple):
+    reads: jax.Array
+    writes: jax.Array
+    read_hits_l1: jax.Array    # DRAM hits (two-level only)
+    read_hits_l2: jax.Array    # SSD / single-level cache read hits
+    write_hits_l2: jax.Array
+    cache_writes_l2: jax.Array  # endurance metric: writes committed to SSD
+    disk_reads: jax.Array
+    disk_writes: jax.Array
+    latency_sum: jax.Array     # seconds (float32)
+
+    @staticmethod
+    def zero() -> "Stats":
+        z = jnp.int32(0)
+        return Stats(z, z, z, z, z, z, z, z, jnp.float32(0.0))
+
+    def merge(self, o: "Stats") -> "Stats":
+        return Stats(*[a + b for a, b in zip(self, o)])
+
+    # -- derived metrics -------------------------------------------------
+    @property
+    def total(self):
+        return self.reads + self.writes
+
+    @property
+    def hits(self):
+        return self.read_hits_l1 + self.read_hits_l2 + self.write_hits_l2
+
+    def hit_ratio(self) -> float:
+        return float(self.hits) / max(int(self.total), 1)
+
+    def mean_latency(self) -> float:
+        return float(self.latency_sum) / max(int(self.total), 1)
+
+
+def make_cache(num_sets: int, ways: int) -> CacheState:
+    return CacheState(
+        tags=jnp.full((num_sets, ways), -1, jnp.int32),
+        lru=jnp.full((num_sets, ways), -1, jnp.int32),
+        dirty=jnp.zeros((num_sets, ways), bool),
+    )
+
+
+def capacity_to_ways(capacity_blocks: int | jax.Array, num_sets: int,
+                     max_ways: int) -> jax.Array:
+    """Blocks -> active ways (ceil), clipped to the geometry."""
+    w = (jnp.asarray(capacity_blocks) + num_sets - 1) // num_sets
+    return jnp.clip(w, 0, max_ways).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# datapath primitives (single request, single set)
+# ---------------------------------------------------------------------------
+
+def _lookup(state: CacheState, s, addr, ways_active):
+    active = jnp.arange(state.tags.shape[1]) < ways_active
+    eq = (state.tags[s] == addr) & active
+    hit = jnp.any(eq)
+    way = jnp.argmax(eq)
+    return hit, way, active
+
+
+def _touch(state: CacheState, s, way, t, set_dirty):
+    return state._replace(
+        lru=state.lru.at[s, way].set(t),
+        dirty=state.dirty.at[s, way].set(state.dirty[s, way] | set_dirty),
+    )
+
+
+def _victim(state: CacheState, s, active):
+    """Pick insert way: first invalid active way, else LRU-min active way."""
+    lru_s = state.lru[s]
+    tags_s = state.tags[s]
+    score = jnp.where(active, jnp.where(tags_s < 0, -1, lru_s), jnp.int32(2**31 - 1))
+    return jnp.argmin(score)
+
+
+def _insert(state: CacheState, s, addr, t, dirty, ways_active):
+    """Insert a block; returns (state, evicted_valid, evicted_dirty)."""
+    active = jnp.arange(state.tags.shape[1]) < ways_active
+    can = ways_active > 0
+    way = _victim(state, s, active)
+    ev_valid = can & (state.tags[s, way] >= 0)
+    ev_dirty = ev_valid & state.dirty[s, way]
+    new = CacheState(
+        tags=state.tags.at[s, way].set(jnp.where(can, addr, state.tags[s, way])),
+        lru=state.lru.at[s, way].set(jnp.where(can, t, state.lru[s, way])),
+        dirty=state.dirty.at[s, way].set(jnp.where(can, dirty, state.dirty[s, way])),
+    )
+    return new, can, ev_valid, ev_dirty
+
+
+def _invalidate(state: CacheState, s, way, pred):
+    return CacheState(
+        tags=state.tags.at[s, way].set(jnp.where(pred, -1, state.tags[s, way])),
+        lru=state.lru.at[s, way].set(jnp.where(pred, -1, state.lru[s, way])),
+        dirty=state.dirty.at[s, way].set(jnp.where(pred, False, state.dirty[s, way])),
+    )
+
+
+# ---------------------------------------------------------------------------
+# single level
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def simulate_single_level(addr, is_write, state: CacheState, ways_active,
+                          policy: Policy, t_cache=T_SSD, t0=0):
+    """Run one request window through a single-level cache.
+
+    Returns (state, Stats, t_end). ``t0`` is the running logical clock so
+    LRU order survives across windows.
+    """
+    num_sets = state.tags.shape[0]
+    ways_active = jnp.asarray(ways_active, jnp.int32)
+    t_cache = jnp.float32(t_cache)
+
+    def step(carry, req):
+        st0, stats, t = carry
+        a, w = req
+        valid = a >= 0  # padded no-op requests carry addr == -1
+        a = jnp.maximum(a, 0)
+        st = st0
+        s = a % num_sets
+        hit, way, active = _lookup(st, s, a, ways_active)
+
+        def on_read(st):
+            lat = jnp.where(hit, t_cache, jnp.float32(T_HDD))
+            st = jax.lax.cond(hit, lambda c: _touch(c, s, way, t, False),
+                              lambda c: c, st)
+            do_alloc = (~hit) & policy.allocates_reads
+            st2, ins, _, ev_dirty = _insert(st, s, a, t, False, ways_active)
+            st = jax.tree_util.tree_map(
+                lambda x, y: jnp.where(do_alloc, y, x), st, st2)
+            cw = jnp.where(do_alloc & ins, 1, 0)
+            dw = jnp.where(do_alloc & ins & ev_dirty, 1, 0)
+            return st, Stats(1, 0, 0, hit.astype(jnp.int32), 0, cw,
+                             (~hit).astype(jnp.int32), dw, lat)
+
+        def on_write(st):
+            if policy.write_invalidates:  # RO: bypass + invalidate stale copy
+                st = _invalidate(st, s, way, hit)
+                return st, Stats(0, 1, 0, 0, 0, 0, 0, 1,
+                                 jnp.float32(T_HDD_WRITE))
+            # WB/WT/WO/WBWO: write-allocate. WT commits synchronously, so
+            # its cached copy stays clean (no write-pending data).
+            mark_dirty = policy.holds_dirty
+            st_hit = _touch(st, s, way, t, mark_dirty)
+            st_ins, ins, _, ev_dirty = _insert(st, s, a, t, mark_dirty,
+                                               ways_active)
+            st = jax.tree_util.tree_map(
+                lambda h, i: jnp.where(hit, h, i), st_hit, st_ins)
+            committed = hit | ins
+            cw = committed.astype(jnp.int32)
+            # write-through also commits to disk synchronously
+            sync = jnp.int32(1 if policy.write_through else 0)
+            dw = sync + jnp.where((~hit) & ins & ev_dirty, 1, 0) \
+                + jnp.where(~committed, 1, 0)
+            lat = jnp.where(
+                committed,
+                jnp.float32(T_HDD_WRITE) if policy.write_through else t_cache,
+                jnp.float32(T_HDD_WRITE))
+            return st, Stats(0, 1, 0, 0, hit.astype(jnp.int32), cw, 0, dw, lat)
+
+        st, ds = jax.lax.cond(w, lambda c: on_write(c), lambda c: on_read(c), st)
+        # mask out padded requests entirely
+        st = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), st, st0)
+        ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
+        return (st, stats.merge(ds), t + valid.astype(jnp.int32)), None
+
+    (state, stats, t_end), _ = jax.lax.scan(
+        step, (state, Stats.zero(), jnp.asarray(t0, jnp.int32)),
+        (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write)))
+    return state, stats, t_end
+
+
+# ---------------------------------------------------------------------------
+# two level (ETICA §4.1/§4.2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def simulate_two_level(addr, is_write, dram: CacheState, ssd: CacheState,
+                       ways_dram, ways_ssd, mode: str = "full", t0=0):
+    """ETICA datapath: DRAM is RO (reads allocate, writes bypass+invalidate);
+    SSD is WBWO. ``mode="full"`` = pull-mode SSD (no datapath updates on
+    miss — contents only change via write hits and the periodic
+    promotion/eviction maintenance). ``mode="npe"`` = write misses allocate
+    in the SSD on the datapath (ETICA-NPE in §5.3).
+    """
+    assert mode in ("full", "npe")
+    ns_d = dram.tags.shape[0]
+    ns_s = ssd.tags.shape[0]
+    ways_dram = jnp.asarray(ways_dram, jnp.int32)
+    ways_ssd = jnp.asarray(ways_ssd, jnp.int32)
+
+    def step(carry, req):
+        dr0, ss0, stats, t = carry
+        a, w = req
+        valid = a >= 0
+        a = jnp.maximum(a, 0)
+        dr, ss = dr0, ss0
+        sd = a % ns_d
+        s2 = a % ns_s
+        d_hit, d_way, _ = _lookup(dr, sd, a, ways_dram)
+        s_hit, s_way, _ = _lookup(ss, s2, a, ways_ssd)
+
+        def on_read(dr, ss):
+            # paper Fig. 6a: DRAM hit -> serve; SSD hit -> promote to DRAM,
+            # serve; miss -> disk, promote to DRAM only (never to SSD).
+            lat = jnp.where(d_hit, jnp.float32(T_DRAM),
+                            jnp.where(s_hit, jnp.float32(T_SSD),
+                                      jnp.float32(T_HDD)))
+            dr = jax.lax.cond(d_hit, lambda c: _touch(c, sd, d_way, t, False),
+                              lambda c: c, dr)
+            ss = jax.lax.cond(s_hit & ~d_hit,
+                              lambda c: _touch(c, s2, s_way, t, False),
+                              lambda c: c, ss)
+            dr_ins, _, _, _ = _insert(dr, sd, a, t, False, ways_dram)
+            promote = ~d_hit
+            dr = jax.tree_util.tree_map(
+                lambda x, y: jnp.where(promote, y, x), dr, dr_ins)
+            return dr, ss, Stats(
+                1, 0, d_hit.astype(jnp.int32),
+                (s_hit & ~d_hit).astype(jnp.int32), 0, 0,
+                (~(d_hit | s_hit)).astype(jnp.int32), 0, lat)
+
+        def on_write(dr, ss):
+            # bypass DRAM; invalidate stale DRAM copy (§4.2 "Write")
+            dr = _invalidate(dr, sd, d_way, d_hit)
+            ss_hit_st = _touch(ss, s2, s_way, t, True)
+            if mode == "npe":
+                ss_ins, ins, _, ev_dirty = _insert(ss, s2, a, t, True, ways_ssd)
+                ss = jax.tree_util.tree_map(
+                    lambda h, i: jnp.where(s_hit, h, i), ss_hit_st, ss_ins)
+                committed = s_hit | ins
+                cw = committed.astype(jnp.int32)
+                dw = jnp.where((~s_hit) & ins & ev_dirty, 1, 0) \
+                    + jnp.where(~committed, 1, 0)
+                lat = jnp.where(committed, jnp.float32(T_SSD),
+                                jnp.float32(T_HDD_WRITE))
+            else:  # full: SSD miss -> straight to disk
+                ss = jax.tree_util.tree_map(
+                    lambda h, i: jnp.where(s_hit, h, i), ss_hit_st, ss)
+                cw = s_hit.astype(jnp.int32)
+                dw = (~s_hit).astype(jnp.int32)
+                lat = jnp.where(s_hit, jnp.float32(T_SSD),
+                                jnp.float32(T_HDD_WRITE))
+            return dr, ss, Stats(0, 1, 0, 0, s_hit.astype(jnp.int32), cw,
+                                 0, dw, lat)
+
+        dr, ss, ds = jax.lax.cond(w, on_write, on_read, dr, ss)
+        dr = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), dr, dr0)
+        ss = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), ss, ss0)
+        ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
+        return (dr, ss, stats.merge(ds), t + valid.astype(jnp.int32)), None
+
+    (dram, ssd, stats, t_end), _ = jax.lax.scan(
+        step, (dram, ssd, Stats.zero(), jnp.asarray(t0, jnp.int32)),
+        (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write)))
+    return dram, ssd, stats, t_end
+
+
+# ---------------------------------------------------------------------------
+# maintenance helpers (between-interval, host side — paper: asynchronous)
+# ---------------------------------------------------------------------------
+
+def resize(state: CacheState, old_ways: int, new_ways: int):
+    """Deactivate ways >= new_ways; returns (state, flushed_dirty_blocks)."""
+    if new_ways >= old_ways:
+        return state, 0
+    tags = np.asarray(state.tags).copy()
+    lru = np.asarray(state.lru).copy()
+    dirty = np.asarray(state.dirty).copy()
+    flushed = int(dirty[:, new_ways:].sum())
+    tags[:, new_ways:] = -1
+    lru[:, new_ways:] = -1
+    dirty[:, new_ways:] = False
+    return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), flushed
+
+
+def resident_blocks(state: CacheState, ways_active: int) -> np.ndarray:
+    tags = np.asarray(state.tags)[:, : max(ways_active, 0)]
+    return tags[tags >= 0]
+
+
+def evict_blocks(state: CacheState, addrs: np.ndarray):
+    """Evict given blocks (maintenance). Returns (state, flushed_dirty)."""
+    tags = np.asarray(state.tags).copy()
+    lru = np.asarray(state.lru).copy()
+    dirty = np.asarray(state.dirty).copy()
+    mask = np.isin(tags, addrs) & (tags >= 0)
+    flushed = int((dirty & mask).sum())
+    tags[mask] = -1
+    lru[mask] = -1
+    dirty[mask] = False
+    return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), flushed
+
+
+def promote_blocks(state: CacheState, addrs: np.ndarray, ways_active: int,
+                   t: int):
+    """Insert blocks into FREE active ways only (paper: promote "only when
+    there is free space in SSD"). Returns (state, n_promoted)."""
+    tags = np.asarray(state.tags).copy()
+    lru = np.asarray(state.lru).copy()
+    dirty = np.asarray(state.dirty).copy()
+    num_sets, _ = tags.shape
+    n = 0
+    for a in np.asarray(addrs):
+        s = int(a) % num_sets
+        if (tags[s, :ways_active] == a).any():
+            continue
+        free = np.nonzero(tags[s, :ways_active] < 0)[0]
+        if free.size == 0:
+            continue
+        w = free[0]
+        tags[s, w] = a
+        lru[s, w] = t
+        dirty[s, w] = False
+        n += 1
+    return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), n

@@ -1,0 +1,100 @@
+"""Block-I/O trace representation.
+
+A trace is a pair of equal-length arrays: block addresses and a write flag.
+Multi-VM traces additionally carry a ``vm`` id per request. Everything is a
+plain pytree of arrays so traces flow through ``jax.jit``/``lax.scan``
+unchanged; host-side code uses the same container with numpy arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Trace:
+    addr: np.ndarray        # int32 [N] block addresses
+    is_write: np.ndarray    # bool  [N]
+    vm: np.ndarray | None = None  # int32 [N] (optional)
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.addr, self.is_write, self.vm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- conveniences ------------------------------------------------------
+    def __len__(self) -> int:
+        return int(np.shape(self.addr)[0])
+
+    def __getitem__(self, sl) -> "Trace":
+        return Trace(
+            addr=self.addr[sl],
+            is_write=self.is_write[sl],
+            vm=None if self.vm is None else self.vm[sl],
+        )
+
+    @property
+    def n_reads(self) -> int:
+        return int(np.sum(~np.asarray(self.is_write)))
+
+    @property
+    def n_writes(self) -> int:
+        return int(np.sum(np.asarray(self.is_write)))
+
+    def for_vm(self, vm_id: int) -> "Trace":
+        assert self.vm is not None
+        m = np.asarray(self.vm) == vm_id
+        return Trace(np.asarray(self.addr)[m], np.asarray(self.is_write)[m])
+
+    def intervals(self, interval: int) -> Iterator["Trace"]:
+        """Yield consecutive fixed-size request windows (paper: 10k reqs)."""
+        for start in range(0, len(self), interval):
+            yield self[start : start + interval]
+
+    @staticmethod
+    def concat(traces: list["Trace"]) -> "Trace":
+        vm = None
+        if all(t.vm is not None for t in traces):
+            vm = np.concatenate([np.asarray(t.vm) for t in traces])
+        return Trace(
+            addr=np.concatenate([np.asarray(t.addr) for t in traces]),
+            is_write=np.concatenate([np.asarray(t.is_write) for t in traces]),
+            vm=vm,
+        )
+
+    @staticmethod
+    def from_ops(ops: list[tuple[str, int]]) -> "Trace":
+        """Build a trace from [('R', sector), ('W', sector), ...] tuples.
+
+        Used by the unit tests to transcribe the paper's worked examples
+        (Figs. 5, 8, 9) verbatim.
+        """
+        addr = np.array([a for _, a in ops], dtype=np.int32)
+        is_write = np.array([op.upper() == "W" for op, _ in ops], dtype=bool)
+        return Trace(addr=addr, is_write=is_write)
+
+
+def interleave(traces: list[Trace], seed: int = 0) -> Trace:
+    """Randomly interleave per-VM traces into one multi-VM trace,
+    preserving each VM's internal request order (hypervisor arrival order).
+    """
+    rng = np.random.default_rng(seed)
+    lengths = [len(t) for t in traces]
+    vm_stream = np.repeat(np.arange(len(traces)), lengths)
+    rng.shuffle(vm_stream)
+    cursors = [0] * len(traces)
+    addr = np.empty(sum(lengths), dtype=np.int32)
+    is_write = np.empty(sum(lengths), dtype=bool)
+    for i, v in enumerate(vm_stream):
+        t = traces[v]
+        addr[i] = t.addr[cursors[v]]
+        is_write[i] = t.is_write[cursors[v]]
+        cursors[v] += 1
+    return Trace(addr=addr, is_write=is_write, vm=vm_stream.astype(np.int32))

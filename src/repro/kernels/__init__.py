@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage ships the kernel (`kernel.py`: pl.pallas_call + explicit
+BlockSpec VMEM tiling), a jitted wrapper (`ops.py`), and a pure-jnp
+oracle (`ref.py`) the kernel is allclose-tested against
+(tests/test_kernels.py sweeps shapes and dtypes; interpret=True executes
+the kernel bodies on CPU).
+
+  * reuse_distance   — tiled windowed distinct-count (POD/URD/TRD), the
+                       paper's PARDA hot path on the TPU VPU
+  * popularity       — fused Eq. 1 exp + segment reduction
+  * flash_attention  — blocked causal/windowed attention fwd (GQA-native)
+  * decode_attention — paged flash-decode over the two-tier KV pool
+                       (scalar-prefetched page tables)
+"""

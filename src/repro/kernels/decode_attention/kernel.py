@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: paged flash-decode over the two-tier KV pool.
+
+This is the ETICA-integrated serving hot spot (DESIGN.md §2): decode
+reads KV *pages* whose HBM residency is decided by the POD/popularity
+controller; the page table indirection is resolved with Pallas *scalar
+prefetch* — the page_table (and per-sequence lengths) are prefetched to
+SMEM, and the KV BlockSpec index_map dereferences them so each grid step
+DMAs exactly the page it needs from the pool (no gather materialization,
+the vLLM-on-TPU pattern).
+
+Grid (B, Hkv, n_pages), pages innermost; online-softmax state for the
+`groups` query heads of one KV head lives in VMEM scratch; output
+written on the final page step. Invalid (beyond-length) slots are masked
+in-tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, ps: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)             # [PS, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)             # [PS, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, PS]
+    tok = p * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = tok < lengths_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           interpret: bool = True):
+    """q: [B, H, D]; k_pages/v_pages: [NP, PS, Hkv, D];
+    page_table: [B, n_pages]; lengths: [B]. Returns [B, H, D]."""
+    b, h, d = q.shape
+    np_, ps, hkv, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    groups = h // hkv
+    qg = q.reshape(b, hkv, groups, d)
+    scale = d ** -0.5
+
+    grid = (b, hkv, n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            # q: one (b, kv-head) group of G query heads
+            pl.BlockSpec((1, 1, groups, d),
+                         lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)),
+            # k/v: the pool page named by the page table (scalar prefetch)
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, p_, pt, ln: (pt[b_, p_], 0, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, p_, pt, ln: (pt[b_, p_], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, groups, d),
+                               lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups, d), jnp.float32),
+            pltpu.VMEM((groups, 1), jnp.float32),
+            pltpu.VMEM((groups, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, ps=ps, n_pages=n_pages, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, groups, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

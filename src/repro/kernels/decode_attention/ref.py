@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: paged single-token decode attention.
+
+q: [B, H, D]; k_pages/v_pages: [NP, PS, Hkv, D] (global page pool);
+page_table: [B, n_pages] int32 (pool page id per logical page);
+lengths: [B] int32 (valid tokens per sequence).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, lengths):
+    b, h, d = q.shape
+    np_, ps, hkv, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    groups = h // hkv
+
+    k = k_pages[page_table]          # [B, n_pages, PS, Hkv, D]
+    v = v_pages[page_table]
+    k = k.reshape(b, n_pages * ps, hkv, d)
+    v = v.reshape(b, n_pages * ps, hkv, d)
+
+    qh = q.reshape(b, hkv, groups, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k.astype(jnp.float32))
+    pos = jnp.arange(n_pages * ps)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

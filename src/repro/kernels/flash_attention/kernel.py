@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blocked causal flash-attention forward.
+
+Grid (B, H, n_q_blocks, n_kv_blocks), kv innermost. Per step a
+[TQ, D] query tile (MXU-aligned, D = head_dim is a multiple of 128 for
+every assigned arch) attends a [TK, D] KV tile; the online-softmax
+running (m, l, acc) state lives in VMEM scratch and survives across the
+kv grid dimension; the output tile is written once on the last kv step.
+GQA is native: the KV BlockSpec index-maps the query head h to its KV
+head h // groups, so KV tiles are fetched once per group, not expanded
+in HBM. Causal + sliding-window masking is applied in-tile.
+
+VMEM per step ~ TQ*D (q) + 2*TK*D (kv) + TQ*TK (scores) + TQ*D (acc):
+default 128/128 tiles with D=128 ≈ 200KB — comfortably inside 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TQ = 128
+DEFAULT_TK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            tq: int, tk: int, causal: bool, window: int, scale: float,
+            n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [TQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)              # [TK, D]
+    v = v_ref[0, 0].astype(jnp.float32)              # [TK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [TQ, TK]
+    q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # [TQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # [TQ, TK]
+    alpha = jnp.exp(m_prev - m_new)                  # [TQ, 1]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "tq", "tk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                    interpret: bool = True):
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Skv, D]. Returns [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    tq = min(tq, sq)
+    tk = min(tk, skv)
+    assert sq % tq == 0 and skv % tk == 0, (sq, tq, skv, tk)
+    grid = (b, h, sq // tq, skv // tk)
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_kernel, tq=tq, tk=tk, causal=causal,
+                          window=window, scale=scale, n_kv=skv // tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // groups, k_, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // groups, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, d), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

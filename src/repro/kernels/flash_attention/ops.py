@@ -1,0 +1,24 @@
+"""Jitted wrapper for blocked flash attention.
+
+``attention(q, k, v, layout="BSHD")`` accepts model-layout tensors
+([B, S, H, D], KV un-expanded GQA) and dispatches to the Pallas kernel
+(interpret=True on CPU; compiled on TPU). The jnp scan in
+``repro.models.attention.blocked_attention`` is the equivalent XLA path
+and this kernel's oracle at the model level.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              interpret: bool = True, tq: int = 128, tk: int = 128):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, H, D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          tq=tq, tk=tk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

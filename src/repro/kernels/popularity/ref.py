@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused popularity kernel (paper Eq. 1).
+
+popularity[b] = sum over accesses i with seg[i] == b of
+                exp(-dist[i]/cacheSize) * [served[i] and dist[i] >= 0]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def popularity_ref(dist, served, seg, num_blocks: int, cache_size: float):
+    cs = jnp.maximum(jnp.float32(cache_size), 1.0)
+    contrib = jnp.where(served & (dist >= 0),
+                        jnp.exp(-dist.astype(jnp.float32) / cs), 0.0)
+    return jnp.zeros(num_blocks, jnp.float32).at[seg].add(contrib)

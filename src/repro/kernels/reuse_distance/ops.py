@@ -1,0 +1,50 @@
+"""Jitted wrapper: policy-filtered reuse distances via the Pallas kernel.
+
+``reuse_distances`` mirrors ``repro.core.reuse.pod_distances`` but runs
+the O(N^2) distinct-count through the TPU kernel (interpret=True executes
+the same kernel body on CPU for validation). The prev/next-touch
+bookkeeping stays in regular jnp (sort-based, O(N log N)) — it is not the
+hot spot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import Policy
+from repro.core import reuse as core_reuse
+from .kernel import count_between
+
+
+def reuse_distances(addr, is_write, policy: Policy, *,
+                    interpret: bool = True,
+                    ti: int = 256, tj: int = 512):
+    """DistResult with the pairwise count computed by the Pallas kernel."""
+    addr = jnp.asarray(addr, jnp.int32)
+    is_write = jnp.asarray(is_write)
+    is_read = ~is_write
+    all_mask = jnp.ones_like(is_write)
+
+    prev_any = core_reuse._prev_same(addr, all_mask)
+    has_prev = prev_any >= 0
+    if policy in (Policy.WB, Policy.WT):
+        touch = all_mask
+        served = is_read & has_prev
+    elif policy is Policy.RO:
+        touch = is_read
+        prev_is_read = jnp.where(has_prev,
+                                 ~is_write[jnp.maximum(prev_any, 0)], False)
+        served = is_read & prev_is_read
+    elif policy in (Policy.WBWO, Policy.WO):
+        prev_write = core_reuse._prev_same(addr, is_write)
+        served = is_read & (prev_write >= 0)
+        touch = is_write | served
+    else:  # pragma: no cover
+        raise ValueError(policy)
+
+    prev_touch = core_reuse._prev_same(addr, touch)
+    next_touch = core_reuse._next_same(addr, touch)
+    dist = count_between(prev_touch, touch.astype(jnp.int32), next_touch,
+                         ti=ti, tj=tj, interpret=interpret)
+    dist = jnp.where(served, dist, core_reuse.COLD)
+    return core_reuse.DistResult(dist=dist, served=served, touch=touch)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the windowed distinct-count (stack distance) kernel.
+
+Given, per access i:
+  * prev[i]  — index of the previous policy-touch of addr[i] (-1 if none),
+  * touch[j] — whether access j occupies/refreshes a cache block,
+  * nt[j]    — index of the next policy-touch of addr[j] (N if none),
+
+the policy-filtered stack distance is
+
+  count[i] = #{ j : prev[i] < j < i, touch[j], nt[j] >= i }
+
+(each qualifying j is the last touch of its address inside the window, so
+the count equals the number of distinct addresses touched between the
+two references). This is exactly `repro.core.reuse._count_between`; the
+kernel tiles it over (i, j) blocks for the TPU VPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def count_between_ref(prev, touch, nt):
+    n = touch.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)[:, None]
+    j = jnp.arange(n, dtype=jnp.int32)[None, :]
+    m = ((j > prev[:, None]) & (j < i) & touch[None, :].astype(bool)
+         & (nt[None, :] >= i))
+    return jnp.sum(m, axis=1, dtype=jnp.int32)

@@ -1,0 +1,2 @@
+from .manager import Session, Stats, TwoTierConfig, TwoTierKVManager
+from .baseline import GlobalLRUManager

@@ -1,0 +1,285 @@
+"""Two-tier KV page manager — ETICA's policy engine applied to serving.
+
+Mapping (DESIGN.md §2): tier-1 = HBM page pool (fast, capacity-pressured,
+*read-only cache* — every resident page is a clean copy, droppable at any
+moment, which is the RO-level reliability argument); tier-2 = host-memory
+pool over PCIe/DMA (authoritative store, *write-back/write-only* — every
+appended page is written there exactly once, so host-DMA write traffic —
+the wear analog — is bounded by generated tokens); the "disk subsystem"
+is recompute-from-tokens.
+
+"VMs" are tenants; the request trace is the stream of session
+activations: scheduling a session into a decode batch *reads* its KV
+working set (must be HBM-resident), finishing a burst *writes* (appends)
+pages. The same core machinery drives the policy:
+
+  * POD(RO) over each tenant's activation trace sizes its HBM partition
+    (`repro.core.reuse`), partitioned under pressure by PPC
+    (`repro.core.partition`);
+  * popularity (Eq. 1, `repro.core.popularity`) ranks sessions; the
+    periodic maintenance step promotes hot sessions' pages into HBM and
+    drops cold ones (pull mode — an activation miss copies pages up for
+    the active batch but does NOT count as a promotion decision).
+
+The pools are jnp arrays compatible with
+`repro.kernels.decode_attention` page tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reuse as core_reuse
+from repro.core.partition import partition as _partition
+from repro.core.policies import Policy
+from repro.core.popularity import PopularityTracker, contributions
+
+PCIE_BW = 8e9            # bytes/s per host link (dma latency model)
+
+
+@dataclasses.dataclass
+class TwoTierConfig:
+    page_size: int = 256          # tokens per page
+    hbm_pages: int = 256          # tier-1 pool capacity
+    num_kv_heads: int = 8
+    head_dim: int = 128
+    num_layers: int = 1           # pages are per-layer-stacked
+    dtype: str = "bfloat16"
+    maintenance_interval: int = 64   # activations between maintenance
+    resize_interval: int = 512       # activations between re-partitioning
+    promo_frac: float = 0.25
+    evict_frac: float = 0.25
+    popularity_decay: float = 0.5
+
+    @property
+    def page_bytes(self) -> int:
+        return (2 * self.num_layers * self.page_size * self.num_kv_heads
+                * self.head_dim * jnp.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass
+class Session:
+    tenant: int
+    length: int = 0                       # tokens
+    pages: list = dataclasses.field(default_factory=list)   # logical pages
+    hbm_slots: dict = dataclasses.field(default_factory=dict)
+    # logical page -> hbm pool slot (only for resident pages)
+
+
+@dataclasses.dataclass
+class Stats:
+    activations: int = 0
+    hits: int = 0                  # fully HBM-resident activations
+    dma_read_bytes: int = 0        # host -> HBM copies (misses, promotions)
+    dma_write_bytes: int = 0       # HBM -> host commits (the wear analog)
+    latency_s: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self) | {
+            "hit_ratio": self.hits / max(self.activations, 1)}
+
+
+class TwoTierKVManager:
+    """Host-side controller + device page pools."""
+
+    def __init__(self, cfg: TwoTierConfig, num_tenants: int):
+        self.cfg = cfg
+        self.num_tenants = num_tenants
+        shape = (cfg.hbm_pages, cfg.page_size, cfg.num_kv_heads,
+                 cfg.head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        # tier-1 device pools (per layer stacked on axis 0)
+        self.k_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
+        self.v_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
+        self.free = list(range(cfg.hbm_pages))
+        self.slot_owner: dict[int, tuple[int, int]] = {}  # slot -> (sid, lp)
+        # tier-2 host pool: {(sid, logical_page): (k_np, v_np)}
+        self.host: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
+        self.sessions: dict[int, Session] = {}
+        # controller state
+        self.trace_addr: list[int] = []
+        self.trace_write: list[bool] = []
+        self.trackers = [PopularityTracker(cfg.popularity_decay)
+                         for _ in range(num_tenants)]
+        self.tenant_quota = np.full(num_tenants,
+                                    cfg.hbm_pages // max(num_tenants, 1))
+        self.tenant_used = np.zeros(num_tenants, np.int64)
+        self.stats = Stats()
+        self._since_maint = 0
+        self._since_resize = 0
+
+    # -- session lifecycle ------------------------------------------------
+    def new_session(self, sid: int, tenant: int):
+        self.sessions[sid] = Session(tenant=tenant)
+
+    def _alloc_slot(self, sid: int, lp: int) -> int:
+        if not self.free:
+            self._evict_one(exclude_sid=sid)
+        slot = self.free.pop()
+        self.slot_owner[slot] = (sid, lp)
+        sess = self.sessions[sid]
+        sess.hbm_slots[lp] = slot
+        self.tenant_used[sess.tenant] += 1
+        return slot
+
+    def _release_slot(self, sid: int, lp: int):
+        sess = self.sessions[sid]
+        slot = sess.hbm_slots.pop(lp, None)
+        if slot is not None:
+            self.slot_owner.pop(slot, None)
+            self.free.append(slot)
+            self.tenant_used[sess.tenant] -= 1
+
+    def _evict_one(self, exclude_sid: int):
+        """Drop the least-popular resident page (RO tier: no write-back).
+
+        Prefers tenants over quota; never touches the active session."""
+        cands = [(slot, sid, lp) for slot, (sid, lp) in self.slot_owner.items()
+                 if sid != exclude_sid]
+        if not cands:
+            raise RuntimeError("HBM pool exhausted by a single session")
+
+        def score(item):
+            _, sid, _ = item
+            sess = self.sessions[sid]
+            over = self.tenant_used[sess.tenant] - self.tenant_quota[sess.tenant]
+            pop = self.trackers[sess.tenant].score(sid)
+            return (-over, pop)  # most-over-quota, then least popular
+
+        slot, sid, lp = min(cands, key=score)
+        self._release_slot(sid, lp)
+
+    # -- datapath ----------------------------------------------------------
+    def activate(self, sid: int) -> np.ndarray:
+        """Make a session's pages HBM-resident; returns its page table.
+
+        A fully-resident activation is a tier-1 hit (DRAM-speed); missing
+        pages are copied up from the host pool (tier-2 "SSD" read) at DMA
+        cost. This is the READ in the block-I/O mapping."""
+        sess = self.sessions[sid]
+        self._record(sid, write=False)
+        missing = [lp for lp in sess.pages if lp not in sess.hbm_slots]
+        self.stats.activations += 1
+        if not missing:
+            self.stats.hits += 1
+        dt = self.k_pool.dtype
+        for lp in missing:
+            slot = self._alloc_slot(sid, lp)
+            k_np, v_np = self.host[(sid, lp)]
+            self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(k_np, dt))
+            self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_np, dt))
+            self.stats.dma_read_bytes += self.cfg.page_bytes
+            self.stats.latency_s += self.cfg.page_bytes / PCIE_BW
+        self._maintenance_tick()
+        return self.page_table(sid)
+
+    def append_page(self, sid: int, k_page: np.ndarray, v_page: np.ndarray):
+        """Commit a freshly generated page: written once to the host pool
+        (tier-2 WBWO — the only mandatory DMA write) and installed in HBM
+        for the ongoing decode. This is the WRITE in the mapping."""
+        sess = self.sessions[sid]
+        lp = len(sess.pages)
+        sess.pages.append(lp)
+        self.host[(sid, lp)] = (np.asarray(k_page), np.asarray(v_page))
+        self.stats.dma_write_bytes += self.cfg.page_bytes
+        dt = self.k_pool.dtype
+        slot = self._alloc_slot(sid, lp)
+        self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(k_page, dt))
+        self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_page, dt))
+        sess.length = lp * self.cfg.page_size + k_page.shape[1]
+        self._record(sid, write=True)
+
+    def page_table(self, sid: int) -> np.ndarray:
+        sess = self.sessions[sid]
+        return np.array([sess.hbm_slots.get(lp, 0) for lp in sess.pages],
+                        np.int32)
+
+    def deactivate(self, sid: int):
+        """Session leaves the active batch; pages stay until evicted
+        (pull-mode: no datapath demotion)."""
+
+    # -- controller --------------------------------------------------------
+    def _record(self, sid: int, write: bool):
+        self.trace_addr.append(sid)
+        self.trace_write.append(write)
+        self._since_maint += 1
+        self._since_resize += 1
+
+    def _maintenance_tick(self):
+        cfg = self.cfg
+        if self._since_maint >= cfg.maintenance_interval:
+            self._since_maint = 0
+            self._update_popularity()
+            self._evict_cold()
+        if self._since_resize >= cfg.resize_interval:
+            self._since_resize = 0
+            self._repartition()
+
+    def _window(self):
+        n = self.cfg.resize_interval
+        addr = np.asarray(self.trace_addr[-n:], np.int32)
+        wr = np.asarray(self.trace_write[-n:], bool)
+        return addr, wr
+
+    def _update_popularity(self):
+        addr, wr = self._window()
+        if addr.size == 0:
+            return
+        r = core_reuse.pod_distances(addr, wr, Policy.RO)
+        contrib = np.asarray(contributions(
+            r.dist, r.served, max(int(self.tenant_quota.sum()), 1)))
+        for t in range(self.num_tenants):
+            mask = np.array([self.sessions[s].tenant == t if s in
+                             self.sessions else False for s in addr])
+            if mask.any():
+                self.trackers[t].update(addr[mask], contrib[mask])
+
+    def _evict_cold(self):
+        """Pull-mode eviction queue: drop the coldest resident sessions'
+        pages down to quota (clean copies — no write-back)."""
+        for t in range(self.num_tenants):
+            over = self.tenant_used[t] - self.tenant_quota[t]
+            if over <= 0:
+                continue
+            resident = {}
+            for slot, (sid, lp) in list(self.slot_owner.items()):
+                if self.sessions[sid].tenant == t:
+                    resident.setdefault(sid, []).append(lp)
+            order = sorted(resident, key=lambda s: self.trackers[t].score(s))
+            for sid in order:
+                for lp in resident[sid]:
+                    if over <= 0:
+                        break
+                    self._release_slot(sid, lp)
+                    over -= 1
+
+    def _repartition(self):
+        """POD(RO) per tenant over the activation window -> PPC split of
+        the HBM pool (paper §4.3 applied to pages)."""
+        addr, wr = self._window()
+        if addr.size == 0:
+            return
+        demands = np.zeros(self.num_tenants, np.int64)
+        grid = np.arange(0, self.cfg.hbm_pages + 1,
+                         max(self.cfg.hbm_pages // 16, 1), dtype=np.int64)
+        curves = np.zeros((self.num_tenants, grid.size))
+        for t in range(self.num_tenants):
+            mask = np.array([s in self.sessions
+                             and self.sessions[s].tenant == t for s in addr])
+            if not mask.any():
+                continue
+            r = core_reuse.pod_distances(addr[mask], wr[mask], Policy.RO)
+            # demand in sessions -> pages (mean pages per session of tenant)
+            sess_pages = [len(s.pages) or 1 for s in self.sessions.values()
+                          if s.tenant == t] or [1]
+            per = int(np.ceil(np.mean(sess_pages)))
+            demands[t] = min(core_reuse.demand_blocks(int(r.max)) * per,
+                             self.cfg.hbm_pages)
+            hits = core_reuse.hit_counts_at_sizes(
+                r.dist, r.served, np.maximum(grid // per, 1))
+            curves[t] = np.asarray(hits, np.float64) / max(mask.sum(), 1)
+        res = _partition(demands, curves, grid, self.cfg.hbm_pages)
+        alloc = np.maximum(res.alloc, 1)
+        self.tenant_quota = alloc

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and the production meshes need 512 placeholder host
+devices. Do not replicate this env var anywhere global — tests and
+benches must see the single real CPU device.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. builds the step implied by the shape kind (train / prefill / decode)
+     and its ShapeDtypeStruct input specs + NamedShardings,
+  3. ``jit(...).lower(...).compile()`` — success proves the sharding plan
+     is coherent (no mismatched collectives, no impossible layouts),
+  4. records cost_analysis (FLOPs/bytes), collective traffic parsed from
+     the compiled HLO (see hlo_analysis), memory_analysis when the
+     backend provides it, and analytic per-device state bytes,
+  5. writes one JSON under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --list   # all cells
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+HW = {  # TPU v5e-class hardware constants (per chip)
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+
+def _sharded_bytes(tree, shardings) -> int:
+    import jax
+    import numpy as np
+
+    def per_leaf(leaf, sh):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize if leaf.shape else leaf.dtype.itemsize
+        spec = sh.spec
+        shards = 1
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            for a in axes:
+                shards *= sh.mesh.shape[a]
+        return n // max(shards, 1)
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    shard_leaves = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    return sum(per_leaf(l, s) for l, s in zip(leaves, shard_leaves))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, sites: str = "none",
+             grad_dtype: str | None = None, census: bool = False,
+             bf16_params: bool = False) -> dict:
+    import contextlib
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.launch import sharding as SH
+    from repro.launch import steps as ST
+    from repro.launch.hlo_analysis import analyze, byte_census
+    from repro.launch.mesh import dp_axes, make_production_mesh
+    from repro.models.config import SHAPES, shape_applicable
+    from repro.models.sharding_hooks import sharding_site_specs
+
+    cfg = configs.get(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    specs = ST.input_specs(cfg, shape)
+    if bf16_params:
+        # serving lever: weights pre-cast to bf16 at load time — halves
+        # weight-read traffic and FSDP gather bytes for decode/prefill
+        import jax.numpy as jnp
+        specs["params"] = jax.tree_util.tree_map(
+            lambda s: (jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                       if s.dtype == jnp.float32 else s),
+            specs["params"])
+        rec["bf16_params"] = True
+    params_sh = SH.param_shardings(cfg, specs["params"], mesh)
+    fsdp = SH.should_fsdp(cfg, mesh)
+    rec["fsdp"] = fsdp
+
+    # optional explicit activation shardings (§Perf levers): "attn" pins
+    # the attention head axis to 'model' only when the head count divides
+    # it, and replicates heads otherwise — avoiding GSPMD's fallback of
+    # per-chunk masked all-reduces for non-divisible head counts.
+    site_specs = {}
+    if sites == "attn":
+        dp = dp_axes(mesh)
+        m = mesh.shape["model"]
+        h_spec = "model" if cfg.num_heads % m == 0 else None
+        kv_spec = "model" if cfg.num_kv_heads % m == 0 else None
+        site_specs = {
+            "attn_q": P(dp, None, h_spec, None),
+            "attn_kv": P(dp, None, kv_spec, None),
+        }
+    rec["sites"] = sites
+    if grad_dtype:
+        rec["grad_dtype"] = grad_dtype
+
+    if shape.kind == "train":
+        step = ST.make_train_step(cfg, grad_dtype=grad_dtype)
+        opt_sh = SH.opt_shardings(cfg, specs["params"], mesh)
+        batch_sh = SH.batch_shardings(specs["batch"], mesh)
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        in_sh = (params_sh, opt_sh, batch_sh)
+        out_sh = (params_sh, opt_sh, None)
+        donate = (0, 1)
+        tokens = shape.global_batch * shape.seq_len
+        rec["model_flops"] = cfg.model_flops(tokens, decode=False)
+        state_bytes = (_sharded_bytes(specs["params"], params_sh)
+                       + _sharded_bytes(specs["opt_state"]["m"], opt_sh["m"])
+                       + _sharded_bytes(specs["opt_state"]["v"], opt_sh["v"]))
+    elif shape.kind == "prefill":
+        clen = ST.cache_len_for(cfg, shape)
+        step = ST.make_prefill_step(cfg, clen)
+        batch_sh = SH.batch_shardings(specs["batch"], mesh)
+        args = (specs["params"], specs["batch"])
+        in_sh = (params_sh, batch_sh)
+        out_sh = None
+        donate = ()
+        tokens = shape.global_batch * shape.seq_len
+        rec["model_flops"] = cfg.model_flops(tokens, decode=True)
+        state_bytes = _sharded_bytes(specs["params"], params_sh)
+    else:  # decode
+        step = ST.make_decode_step(cfg)
+        cache_sh = SH.cache_shardings(specs["cache"], mesh)
+        tok_sh = SH.batch_sharding((shape.global_batch, 1), mesh)
+        pos_sh = NamedSharding(mesh, P())
+        args = (specs["params"], specs["cache"], specs["tokens"],
+                specs["pos"])
+        in_sh = (params_sh, cache_sh, tok_sh, pos_sh)
+        out_sh = (None, cache_sh)
+        donate = (1,)
+        tokens = shape.global_batch  # one new token per sequence
+        rec["model_flops"] = cfg.model_flops(tokens, decode=True)
+        state_bytes = (_sharded_bytes(specs["params"], params_sh)
+                       + _sharded_bytes(specs["cache"], cache_sh))
+
+    ctx = (sharding_site_specs(site_specs) if site_specs
+           else contextlib.nullcontext())
+    with mesh, ctx:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost_flops"] = float(ca.get("flops", 0.0))
+    rec["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                v = getattr(ma, field, None)
+                if v is not None:
+                    rec[f"mem_{field}"] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis_error"] = str(e)
+    rec["state_bytes_per_device"] = int(state_bytes)
+
+    hlo = analyze(compiled.as_text())
+    # The compiled SPMD module is the per-device program (shard shapes),
+    # so parsed numbers are per device; globals scale by chip count. The
+    # parser also expands while (scan) bodies by trip count, which XLA's
+    # own cost_analysis does not.
+    chips = rec["chips"]
+    rec["collectives"] = hlo["per_op"]
+    rec["collective_counts"] = hlo["count"]
+    rec["collective_bytes_per_device"] = hlo["total"]
+    rec["collective_bytes"] = hlo["total"] * chips
+    rec["flops_per_device"] = max(hlo["dot_flops"], rec["xla_cost_flops"])
+    rec["flops"] = rec["flops_per_device"] * chips
+    rec["hlo_bytes_per_device"] = max(hlo["hbm_bytes"], rec["xla_cost_bytes"])
+    rec["hlo_bytes"] = rec["hlo_bytes_per_device"] * chips
+
+    rec["t_compute_s"] = rec["flops"] / (chips * HW["peak_flops_bf16"])
+    rec["t_memory_s"] = rec["hlo_bytes"] / (chips * HW["hbm_bw"])
+    rec["t_collective_s"] = rec["collective_bytes"] / (chips * HW["ici_bw"])
+    terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+             "collective": rec["t_collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["useful_flops_ratio"] = (rec["model_flops"] / rec["flops"]
+                                 if rec["flops"] else 0.0)
+    if census:
+        rec["census"] = byte_census(compiled.as_text())
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--list", action="store_true",
+                    help="print all cells (arch shape) and exit")
+    ap.add_argument("--override", default="",
+                    help="comma list k=v ModelConfig overrides (perf loop)")
+    ap.add_argument("--sites", default="none", choices=["none", "attn"],
+                    help="explicit activation sharding sites (perf lever)")
+    ap.add_argument("--grad-dtype", default="",
+                    help="cast grads before optimizer (e.g. bfloat16)")
+    ap.add_argument("--census", action="store_true",
+                    help="include a byte/collective census in the JSON")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="serve with bf16 weights (perf lever)")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    from repro.models.config import SHAPES
+
+    if args.list:
+        for a in configs.ARCH_IDS:
+            for s in SHAPES:
+                print(a, s)
+        return 0
+
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = type(getattr(configs.get(args.arch), k))(eval(v))
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, overrides,
+                   sites=args.sites, grad_dtype=args.grad_dtype or None,
+                   census=args.census, bf16_params=args.bf16_params)
+    os.makedirs(args.out, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{rec['mesh']}__{args.tag}.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    print("wrote", path, file=sys.stderr)
+    return 0 if rec["status"] in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)

@@ -1,0 +1,353 @@
+"""Roofline-term analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has two gaps for our purposes: it reports no
+collective traffic at all, and it counts ``while`` bodies (scan-over-
+layers, chunked loss) once instead of trip-count times. This module
+parses the scheduled HLO module directly:
+
+  * two-pass per computation: first a symbol table (%name -> shape), then
+    metrics per op line with operand shapes resolved through the table
+    (scheduled HLO prints operands by name only);
+  * ``while`` bodies are multiplied by XLA's recorded
+    ``known_trip_count`` (fallback: the constant in the loop condition);
+  * dot FLOPs = 2 * prod(result dims) * prod(contracting dims);
+  * HBM bytes = result + operand bytes of materializing top-level ops
+    (fusion internals excluded — a fusion reads its operands and writes
+    its result once);
+  * collective bytes = max(result, largest operand) per all-reduce /
+    all-gather / reduce-scatter / all-to-all / collective-permute.
+
+All numbers are per-device (the SPMD module is the per-device program);
+the dry-run driver scales by chip count.
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")
+
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPNAME_RE = re.compile(r"^\s*([a-z0-9\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"\b(to_apply|body|condition|called_computations|calls)=%?([\w\.\-]+)")
+_CALL_LIST_RE = re.compile(r"\b(branch_computations)={([^}]*)}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims={([0-9,]*)}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n"\s*:\s*"(\d+)"')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "copy-start", "copy-done", "while", "call", "conditional",
+             "custom-call", "opt-barrier"}
+
+# ops that touch only a window of their (possibly huge) operands: count
+# bytes moved, not operand size
+_WINDOW_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _nbytes(dtype: str, dim_str: str) -> int:
+    n = 1
+    for d in _dims(dim_str):
+        n *= d
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_bytes", "result_dims", "operands",
+                 "line", "result_elems")
+
+    def __init__(self, name, kind, result_bytes, result_dims, operands,
+                 line, result_elems=()):
+        self.name = name
+        self.kind = kind
+        self.result_bytes = result_bytes
+        self.result_dims = result_dims
+        self.operands = operands
+        self.line = line
+        self.result_elems = result_elems  # per-tuple-element byte sizes
+
+
+def _parse_module(text: str):
+    """-> (comps: {name: [_Op]}, entry_name)."""
+    comps: dict[str, list[_Op]] = {}
+    entry = None
+    cur: list[_Op] | None = None
+    for line in text.splitlines():
+        hm = _COMP_HDR.match(line)
+        if hm and "{" in line:
+            name = hm.group(1)
+            comps[name] = []
+            cur = comps[name]
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, rhs = om.group(1), om.group(2)
+        # split off the result type; tuple types contain parens, so walk
+        # to the matching close paren when the type starts with '('
+        rest = rhs
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        rest = rhs[i + 1:]
+                        break
+            type_part = rhs[: len(rhs) - len(rest)]
+            paren = rest.find("(")
+            pre = rest[:paren] if paren > 0 else rest
+        else:
+            paren = rhs.find("(")
+            pre = rhs[:paren] if paren > 0 else rhs
+            type_part = pre
+            rest = rhs
+        kind_m = re.search(r"([a-z0-9\-]+)$", pre.strip())
+        kind = kind_m.group(1) if kind_m else "?"
+        shapes = _SHAPE_RE.findall(type_part)
+        elems = tuple(_nbytes(d, s) for d, s in shapes)
+        rbytes = sum(elems)
+        rdims = _dims(shapes[0][1]) if len(shapes) == 1 else []
+        # operands: %names inside the call parens (cut at attrs)
+        operand_str = rest[paren:] if paren > 0 else ""
+        attr_cut = operand_str.find("), ")
+        if attr_cut >= 0:
+            operand_str = operand_str[: attr_cut + 1]
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.append(_Op(name, kind, rbytes, rdims, operands, rhs, elems))
+    return comps, entry
+
+
+def _inplace_fusion_bytes(op: _Op, operand_bytes: list) -> int:
+    """Traffic of a fusion wrapping dynamic-update-slice: operands that
+    size-match a result (tuple) element are aliased in place — only the
+    unmatched operands and unmatched result elements move."""
+    import collections as _c
+    elems = _c.Counter(op.result_elems)
+    moved = 0
+    for ob in sorted(operand_bytes, reverse=True):
+        if elems.get(ob, 0) > 0:
+            elems[ob] -= 1          # aliased: passes through in place
+        else:
+            moved += ob
+    moved += sum(sz * n for sz, n in elems.items())
+    return moved
+
+
+def analyze(text: str) -> dict:
+    comps, entry = _parse_module(text)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # symbol tables: per computation, name -> (_Op)
+    sym: dict[str, dict[str, _Op]] = {
+        c: {op.name: op for op in ops} for c, ops in comps.items()}
+
+    # fusion bodies: flops counted, bytes not (they materialize as a unit)
+    fusion_bodies: set[str] = set()
+    # fusions that wrap a dynamic-update-slice over a same-sized operand
+    # run IN PLACE (XLA aliases input/output): charging full operand +
+    # result bytes would bill a whole KV-cache copy per decoded token.
+    inplace_bodies: set[str] = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind == "fusion":
+                m = _CALL_RE.search(op.line)
+                if m and m.group(1) == "calls":
+                    fusion_bodies.add(m.group(2))
+    for body in fusion_bodies:
+        for op in comps.get(body, []):
+            if op.kind == "dynamic-update-slice":
+                inplace_bodies.add(body)
+                break
+
+    memo: dict[str, tuple] = {}
+
+    def dot_flops(op: _Op, table) -> float:
+        res = 1
+        for d in op.result_dims:
+            res *= d
+        k = 1
+        mc = _CONTRACT_RE.search(op.line)
+        if mc and op.operands:
+            lhs = table.get(op.operands[0])
+            if lhs is not None:
+                for idx in _dims(mc.group(1)):
+                    if idx < len(lhs.result_dims):
+                        k *= lhs.result_dims[idx]
+        return 2.0 * res * k
+
+    def walk(name: str, stack: frozenset):
+        if name in memo:
+            return memo[name]
+        zero = (collections.Counter(), collections.Counter(), 0.0, 0.0)
+        if name not in comps or name in stack:
+            return zero
+        stack = stack | {name}
+        table = sym[name]
+        by = collections.Counter()
+        cnt = collections.Counter()
+        flops = 0.0
+        hbm = 0.0
+        in_fusion = name in fusion_bodies
+        for op in comps[name]:
+            base = op.kind.removesuffix("-start")
+            operand_bytes = [table[o].result_bytes for o in op.operands
+                             if o in table]
+            if base in COLL_OPS:
+                by[base] += max(op.result_bytes,
+                                max(operand_bytes, default=0))
+                cnt[base] += 1
+            if op.kind == "dot":
+                flops += dot_flops(op, table)
+            if not in_fusion and op.kind not in _FREE_OPS:
+                if op.kind in _WINDOW_OPS:
+                    hbm += 2 * op.result_bytes
+                elif op.kind == "dynamic-update-slice":
+                    upd = (table[op.operands[1]].result_bytes
+                           if len(op.operands) > 1 and op.operands[1] in table
+                           else op.result_bytes)
+                    hbm += 2 * upd
+                elif op.kind == "scatter":
+                    upd = (table[op.operands[2]].result_bytes
+                           if len(op.operands) > 2 and op.operands[2] in table
+                           else op.result_bytes)
+                    hbm += 2 * upd
+                elif op.kind == "fusion":
+                    m = _CALL_RE.search(op.line)
+                    if m and m.group(2) in inplace_bodies:
+                        hbm += _inplace_fusion_bytes(op, operand_bytes)
+                    else:
+                        hbm += op.result_bytes + sum(operand_bytes)
+                else:
+                    hbm += op.result_bytes + sum(operand_bytes)
+            # nested computations
+            calls = [(m.group(1), m.group(2))
+                     for m in _CALL_RE.finditer(op.line)]
+            for m in _CALL_LIST_RE.finditer(op.line):
+                calls += [(m.group(1), s.strip().lstrip("%"))
+                          for s in m.group(2).split(",") if s.strip()]
+            for attr, sub in calls:
+                sb, sc, sf, sh = walk(sub, stack)
+                mult = 1
+                if op.kind == "while" and attr == "body":
+                    mt = _TRIP_RE.search(op.line)
+                    if mt:
+                        mult = int(mt.group(1))
+                    else:
+                        cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                        if cm and cm.group(1) in comps:
+                            best = 1
+                            for o2 in comps[cm.group(1)]:
+                                for c in _CONST_RE.findall(o2.line):
+                                    best = max(best, int(c))
+                            mult = best
+                for k_, v in sb.items():
+                    by[k_] += v * mult
+                for k_, v in sc.items():
+                    cnt[k_] += v * mult
+                flops += sf * mult
+                hbm += sh * mult
+        memo[name] = (by, cnt, flops, hbm)
+        return memo[name]
+
+    by, cnt, flops, hbm = walk(entry, frozenset()) if entry else (
+        collections.Counter(), collections.Counter(), 0.0, 0.0)
+    return {"per_op": dict(by), "total": int(sum(by.values())),
+            "count": dict(cnt), "dot_flops": flops, "hbm_bytes": hbm}
+
+
+def collective_bytes(text: str) -> dict:
+    """Back-compat wrapper around :func:`analyze`."""
+    r = analyze(text)
+    return {"per_op": r["per_op"], "total": r["total"], "count": r["count"]}
+
+
+def byte_census(text: str, top: int = 15) -> dict:
+    """Trip-expanded byte attribution: per op kind, and the top individual
+    op sites (with their jax op_name metadata) — the §Perf profile."""
+    comps, entry = _parse_module(text)
+    sym = {c: {op.name: op for op in ops} for c, ops in comps.items()}
+    fusion_bodies = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind == "fusion":
+                m = _CALL_RE.search(op.line)
+                if m and m.group(1) == "calls":
+                    fusion_bodies.add(m.group(2))
+    per_kind: collections.Counter = collections.Counter()
+    sites: collections.Counter = collections.Counter()
+    colls: collections.Counter = collections.Counter()
+
+    def op_bytes(op, table):
+        operand_bytes = [table[o].result_bytes for o in op.operands
+                         if o in table]
+        if op.kind in _WINDOW_OPS:
+            return 2 * op.result_bytes
+        if op.kind == "dynamic-update-slice":
+            return 2 * (table[op.operands[1]].result_bytes
+                        if len(op.operands) > 1 and op.operands[1] in table
+                        else op.result_bytes)
+        return op.result_bytes + sum(operand_bytes)
+
+    def meta(op):
+        m = re.search(r'op_name="([^"]+)"', op.line)
+        return (m.group(1)[:90] if m else op.name[:60])
+
+    def walk(name, stack, mult):
+        if name not in comps or name in stack:
+            return
+        stack = stack | {name}
+        table = sym[name]
+        in_fusion = name in fusion_bodies
+        for op in comps[name]:
+            base = op.kind.removesuffix("-start")
+            if base in COLL_OPS:
+                b = max(op.result_bytes,
+                        max((table[o].result_bytes for o in op.operands
+                             if o in table), default=0))
+                colls[f"{base} | {meta(op)}"] += b * mult
+            if not in_fusion and op.kind not in _FREE_OPS:
+                b = op_bytes(op, table)
+                per_kind[op.kind] += b * mult
+                sites[f"{op.kind} | {meta(op)}"] += b * mult
+            calls = [(m.group(1), m.group(2))
+                     for m in _CALL_RE.finditer(op.line)]
+            for attr, sub in calls:
+                m2 = 1
+                if op.kind == "while" and attr == "body":
+                    mt = _TRIP_RE.search(op.line)
+                    m2 = int(mt.group(1)) if mt else 1
+                walk(sub, stack, mult * m2)
+
+    if entry:
+        walk(entry, frozenset(), 1)
+    return {
+        "per_kind": dict(per_kind.most_common()),
+        "top_sites": dict(sites.most_common(top)),
+        "top_collectives": dict(colls.most_common(top)),
+    }

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ('data', 'model').
+Multi-pod:  2x16x16 = 512 chips, axes ('pod', 'data', 'model') — the
+'pod' axis only ever carries batch (pure data parallelism across pods,
+so cross-pod traffic is one gradient reduction per step / none when
+serving).
+
+Defined as functions (never module-level) so importing this module never
+touches jax device state — required because the dry-run process forces
+``xla_force_host_platform_device_count=512`` before first jax init while
+tests/benches must see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    # dry-run host platform exposes 512 placeholder devices; the
+    # single-pod mesh uses the first 256 of them.
+    assert len(devices) >= n, (
+        f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+        "under launch/dryrun.py which forces "
+        "xla_force_host_platform_device_count=512")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh over whatever devices exist (tests on 1 CPU)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The batch-carrying axes of a mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

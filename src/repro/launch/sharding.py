@@ -1,0 +1,199 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per mesh.
+
+Policy (DESIGN.md §5):
+  * tensor parallelism over 'model' — attention heads, MLP hidden, MoE
+    experts (expert-parallel when num_experts divides the axis, otherwise
+    tensor-parallel inside each expert), vocab;
+  * batch over ('pod','data');
+  * FSDP ('data'-axis weight sharding) automatically for configs whose
+    TP-sharded fp32 params would exceed ``fsdp_threshold_bytes`` per
+    device; otherwise only optimizer moments are 'data'-sharded (ZeRO-1);
+  * KV caches: batch over data when divisible, KV heads over 'model' when
+    divisible else KV sequence over 'model' (GQA kv=8 < 16-way axis).
+
+Everything is divisibility-checked against the actual mesh, so the same
+rules serve the 16x16 pod, the 2x16x16 multi-pod, and the 1-device test
+mesh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from .mesh import axis_size, dp_axes
+
+
+def _divides(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0 and n >= size
+
+
+def _axes_size(mesh, axes) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in axes]))
+
+
+def _greedy(shape, mesh, prefs):
+    """Assign mesh axes to dims by preference order with divisibility.
+
+    prefs: list of (dim, axes) where axes is a str or tuple of axis names
+    (tried as a combined product). Later prefs skip used axes/dims.
+    """
+    spec = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axes in prefs:
+        if dim >= len(shape) or spec[dim] is not None:
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        axes_t = tuple(a for a in axes_t
+                       if a in mesh.axis_names and a not in used)
+        if not axes_t:
+            continue
+        if _divides(shape[dim], _axes_size(mesh, axes_t)):
+            spec[dim] = axes_t if len(axes_t) > 1 else axes_t[0]
+            used.update(axes_t)
+    return P(*spec)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        out.append(getattr(p, "key", getattr(p, "name", str(p))))
+    return out
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh, fsdp: bool) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    stacked = "layers" in names  # leading superlayer axis
+    off = 1 if stacked else 0
+    m = axis_size(mesh, "model")
+    d = axis_size(mesh, "data")
+
+    def pad(*spec):
+        full = (None,) * off + spec
+        full = full + (None,) * (len(shape) - len(full))
+        return list(full[: len(shape)])
+
+    spec: list = pad()
+    if "table" in names:  # embeddings [V, D]
+        spec = [None] * len(shape)
+        if _divides(shape[0], m):
+            spec[0] = "model"
+    elif names[-1] == "w":
+        site = names[-2]
+        if site in ("wq", "wk", "wv"):
+            if _divides(shape[off + 1], m):
+                spec = pad(None, "model")
+        elif site == "wo":
+            if _divides(shape[off + 0], m):
+                spec = pad("model", None)
+        elif site in ("w_up", "w_gate", "in_proj"):
+            if _divides(shape[off + 1], m):
+                spec = pad(None, "model")
+        elif site in ("w_down", "out_proj"):
+            if _divides(shape[off + 0], m):
+                spec = pad("model", None)
+        # router stays replicated
+    elif names[-1] in ("w_up", "w_gate") and len(shape) - off == 3:
+        # MoE expert weights [E, D, F]
+        e, ff = shape[off], shape[off + 2]
+        if _divides(e, m):
+            spec = pad("model", None, None)        # expert parallel
+        elif _divides(ff, m):
+            spec = pad(None, None, "model")        # TP inside experts
+    elif names[-1] == "w_down" and len(shape) - off == 3:
+        e, ff = shape[off], shape[off + 1]
+        if _divides(e, m):
+            spec = pad("model", None, None)
+        elif _divides(ff, m):
+            spec = pad(None, "model", None)
+    elif names[-1] in ("conv_w", "conv_b", "A_log", "D", "dt_bias",
+                       "norm_scale", "scale"):
+        spec = [None] * len(shape)  # small/replicated
+
+    # FSDP: shard the largest still-unsharded non-stacked dim over 'data'
+    if fsdp and len(shape) - off >= 2:
+        cands = sorted(
+            (i for i in range(off, len(shape))
+             if spec[i] is None and _divides(shape[i], d)),
+            key=lambda i: -shape[i])
+        if cands:
+            spec[cands[0]] = "data"
+    return P(*spec)
+
+
+def should_fsdp(cfg: ModelConfig, mesh,
+                threshold_bytes: float = 4e9) -> bool:
+    total, _ = cfg.param_counts()
+    m = axis_size(mesh, "model")
+    return total * 4 / m > threshold_bytes
+
+
+def param_shardings(cfg: ModelConfig, params_shape, mesh, fsdp=None):
+    fsdp = should_fsdp(cfg, mesh) if fsdp is None else fsdp
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, cfg, mesh, fsdp)),
+        params_shape)
+
+
+def opt_shardings(cfg: ModelConfig, params_shape, mesh, fsdp=None):
+    """Moments get 'data' sharding even without FSDP (ZeRO-1)."""
+    fsdp = should_fsdp(cfg, mesh) if fsdp is None else fsdp
+    moments = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, cfg, mesh, True)),
+        params_shape)
+    return {"m": moments, "v": moments,
+            "step": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_sharding(shape, mesh) -> NamedSharding:
+    """Token-like arrays [B, ...]: batch over ('pod','data')."""
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, _greedy(shape, mesh, [(0, dp)]))
+
+
+def cache_leaf_spec(path, leaf, mesh) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    dp = dp_axes(mesh)
+    if names[-1] in ("k", "v"):
+        if len(shape) == 5:    # [R, B, S, Hkv, Dh]
+            return _greedy(shape, mesh,
+                           [(1, dp), (3, "model"), (2, "model"),
+                            (2, dp), (2, ("data", "model"))])
+        if len(shape) == 4:    # [B, S, Hkv, Dh] (prefix layer)
+            return _greedy(shape, mesh,
+                           [(0, dp), (2, "model"), (1, "model")])
+    if names[-1] == "ssd":     # [R, B, H, P, N] or [B, H, P, N]
+        off = len(shape) - 4
+        return _greedy(shape, mesh,
+                       [(off + 0, dp), (off + 1, "model")])
+    if names[-1] == "conv":    # [R, B, W-1, conv_dim]
+        off = len(shape) - 3
+        return _greedy(shape, mesh,
+                       [(off + 0, dp), (off + 2, "model")])
+    if names and names[0] == "memory_kv":  # [R, B, S_enc, Hkv, Dh]
+        return _greedy(shape, mesh,
+                       [(1, dp), (3, "model"), (2, "model")])
+    return P()
+
+
+def cache_shardings(cache_shape, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_leaf_spec(path, leaf, mesh)),
+        cache_shape)
+
+
+def batch_shardings(batch_shape, mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: batch_sharding(leaf.shape, mesh), batch_shape)

@@ -1,0 +1,88 @@
+"""Run the full dry-run sweep: every (arch x shape x mesh) cell in its own
+subprocess (fresh XLA + device-count init per cell), resumable — cells
+with an existing JSON are skipped.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.sweep [--out experiments/dryrun]
+      [--multi-pod-only|--single-pod-only] [--timeout 2400]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cells():
+    from repro import configs
+    from repro.models.config import SHAPES
+    for arch in configs.ARCH_IDS:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("16x16", []))
+    if not args.single_pod_only:
+        meshes.append(("2x16x16", ["--multi-pod"]))
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = [(a, s, m, extra) for (a, s) in cells() for (m, extra) in meshes]
+    t_start = time.time()
+    n_ok = n_skip = n_fail = n_cached = 0
+    for i, (arch, shape, mesh_name, extra) in enumerate(todo):
+        path = os.path.join(
+            args.out, f"{arch}__{shape}__{mesh_name}__{args.tag}.json")
+        if os.path.exists(path):
+            n_cached += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", args.out,
+               "--tag", args.tag] + extra
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh_name} ...",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            status = "?"
+            if os.path.exists(path):
+                with open(path) as f:
+                    status = json.load(f).get("status", "?")
+            if r.returncode == 0 and status in ("ok", "skip"):
+                if status == "skip":
+                    n_skip += 1
+                else:
+                    n_ok += 1
+                print(f"    {status} in {time.time()-t0:.0f}s", flush=True)
+            else:
+                n_fail += 1
+                tail = (r.stderr or r.stdout or "")[-2000:]
+                print(f"    FAIL rc={r.returncode}\n{tail}", flush=True)
+                with open(path + ".fail", "w") as f:
+                    f.write(tail)
+        except subprocess.TimeoutExpired:
+            n_fail += 1
+            print("    TIMEOUT", flush=True)
+            with open(path + ".fail", "w") as f:
+                f.write("timeout")
+    print(f"done in {time.time()-t_start:.0f}s: ok={n_ok} skip={n_skip} "
+          f"fail={n_fail} cached={n_cached}", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""GQA attention: training (chunked-causal), prefill, and decode paths.
+
+Training/prefill use a blocked online-softmax ("flash") formulation as a
+`lax.scan` over KV chunks so the full [S, S] score matrix is never
+materialized (required for the 32k-prefill shapes); on TPU the inner
+computation is the `repro.kernels.flash_attention` Pallas kernel — the
+jnp scan here is also its reference oracle.
+
+Decode attends one query position against a KV cache; for sliding-window
+configs only the last `window` positions are attended (the sub-quadratic
+path that makes mixtral's long_500k cell tractable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense, head_rmsnorm, init_dense, init_rmsnorm
+from .sharding_hooks import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, h * dh),
+        "wk": init_dense(ks[1], d, hk * dh),
+        "wv": init_dense(ks[2], d, hk * dh),
+        "wo": init_dense(ks[3], h * dh, d, scale=(h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _project_q(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    b, s, _ = x.shape
+    q = dense(params["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    q = constrain(q, "attn_q")
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"]["scale"], q, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    b, s, _ = x.shape
+    k = dense(params["wk"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+    if cfg.qk_norm:
+        k = head_rmsnorm(params["k_norm"]["scale"], k, cfg.norm_eps)
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _expand_kv(x, groups: int):
+    """[B,S,Hkv,Dh] -> [B,S,Hkv*groups,Dh] (GQA head replication)."""
+    b, s, hk, dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, hk, groups, dh)
+                            ).reshape(b, s, hk * groups, dh)
+
+
+# ---------------------------------------------------------------------------
+# blocked causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, q_offset: int = 0):
+    """Online-softmax attention scanning KV chunks.
+
+    q: [B,Sq,H,Dh], k/v: [B,Skv,H,Dh] (already GQA-expanded).
+    window > 0 restricts attention to the trailing `window` positions
+    (sliding-window); q_offset is the absolute position of q[0] relative
+    to k[0] (for cached prefill continuation).
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    scale = dh ** -0.5
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # [B,H,Sq,Dh]
+    kc = k.transpose(0, 2, 1, 3).reshape(b, h, skv // chunk, chunk, dh)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, h, skv // chunk, chunk, dh)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kj, vj, j = xs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         jnp.arange(skv // chunk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,Dh]
+
+
+def attention_train(params, cfg: ModelConfig, x, positions, chunk: int = 1024):
+    """Full causal self-attention for training/prefill. Returns (out, k, v)
+    so callers can populate a KV cache (prefill)."""
+    q = _project_q(params, cfg, x, positions)
+    k, v = _project_kv(params, cfg, x, positions)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    out = blocked_attention(
+        q, _expand_kv(k, groups), _expand_kv(v, groups),
+        causal=True, window=cfg.sliding_window,
+        chunk=min(chunk, x.shape[1]))
+    b, s, _, _ = out.shape
+    out = dense(params["wo"], out.reshape(b, s, -1))
+    return out, k, v
+
+
+def attention_encoder(params, cfg: ModelConfig, x, positions):
+    """Bidirectional (encoder) self-attention."""
+    q = _project_q(params, cfg, x, positions)
+    k, v = _project_kv(params, cfg, x, positions)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    out = blocked_attention(q, _expand_kv(k, groups), _expand_kv(v, groups),
+                            causal=False, chunk=min(1024, x.shape[1]))
+    b, s, _, _ = out.shape
+    return dense(params["wo"], out.reshape(b, s, -1))
+
+
+def attention_cross(params, cfg: ModelConfig, x, memory_kv, positions):
+    """Cross-attention against precomputed encoder memory (k, v)."""
+    k, v = memory_kv
+    q = _project_q(params, cfg, x, positions, rope=False)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    out = blocked_attention(q, _expand_kv(k, groups), _expand_kv(v, groups),
+                            causal=False, chunk=min(1024, k.shape[1]))
+    b, s, _, _ = out.shape
+    return dense(params["wo"], out.reshape(b, s, -1))
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos):
+    """x: [B,1,D]; cache_k/v: [B,Skv,Hkv,Dh].
+
+    Returns (out [B,1,D], new_k, new_v). The new token's K/V is written at
+    ``pos % Skv`` — for full-context caches (Skv = seq_len) that is just
+    ``pos``; for sliding-window archs the cache is allocated at window
+    size and behaves as a ring buffer (K/V are stored post-RoPE with
+    absolute positions, so ring order does not affect correctness). This
+    is the sub-quadratic path that makes 500k-context decode tractable
+    for SWA configs. On TPU the inner loop is the
+    `repro.kernels.decode_attention` kernel.
+    """
+    b, _, _ = x.shape
+    skv = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _project_q(params, cfg, x, positions)              # [B,1,H,Dh]
+    k_new, v_new = _project_kv(params, cfg, x, positions)  # [B,1,Hkv,Dh]
+    write_idx = pos % skv
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), write_idx, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), write_idx, axis=1)
+
+    groups = cfg.num_heads // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+    qh = q[:, 0].reshape(b, cfg.num_kv_heads, groups, cfg.head_dim)
+    # Work on the cache's native [B,Skv,Hkv,Dh] layout with bf16 MXU dots
+    # (fp32 accumulation). Transposing or up-casting the cache would
+    # materialize a full extra copy per layer per token — the dominant
+    # byte term in the baseline decode profile (EXPERIMENTS.md §Perf).
+    s = jnp.einsum("bhgd,bshd->bhgs", (qh * scale).astype(cache_k.dtype),
+                   cache_k, preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(skv)
+    # slots beyond the number of tokens written so far are invalid; a full
+    # ring (pos + 1 >= skv) is entirely valid and entirely in-window.
+    valid = k_pos[None, None, None, :] < jnp.minimum(pos + 1, skv)
+    if cfg.sliding_window and skv > cfg.sliding_window:
+        valid &= k_pos[None, None, None, :] > pos - cfg.sliding_window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return dense(params["wo"], out), cache_k, cache_v
+
+
+def attention_cross_decode(params, cfg: ModelConfig, x, memory_kv, pos):
+    """Decode-time cross attention (static encoder memory)."""
+    k, v = memory_kv
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _project_q(params, cfg, x, positions, rope=False)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    scale = cfg.head_dim ** -0.5
+    qh = q[:, 0].reshape(b, cfg.num_kv_heads, groups, cfg.head_dim)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qh.astype(jnp.float32) * scale,
+                   k.transpose(0, 2, 1, 3).astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p,
+                     v.transpose(0, 2, 1, 3).astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return dense(params["wo"], out)

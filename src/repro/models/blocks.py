@@ -1,0 +1,147 @@
+"""Superlayer blocks: pre-norm residual blocks composed per the config's
+layer pattern, with train/prefill/decode variants sharing parameters.
+
+A *superlayer* is one period of the pattern (Jamba: 7 mamba + 1 attn with
+MoE on every 2nd block; dense models: a single block). Parameter pytrees
+for all superlayers are stacked on a leading axis and scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .config import BlockSpec, ModelConfig
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec, cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": init_rmsnorm(cfg.d_model)}
+    if spec.kind == "attn":
+        p["mixer"] = attn.init_attention(k1, cfg)
+    else:
+        p["mixer"] = ssm_lib.init_ssm(k1, cfg)
+    if cross:
+        p["norm_x"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn.init_attention(k2, cfg, cross=True)
+    if spec.has_mlp:
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        if spec.moe:
+            p["ffn"] = moe_lib.init_moe(k3, cfg)
+        else:
+            p["ffn"] = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def _ffn_apply(p, cfg: ModelConfig, spec: BlockSpec, x):
+    if not spec.has_mlp:
+        return x, 0.0
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, aux = moe_lib.moe_mlp(p["ffn"], cfg, h)
+    else:
+        y, aux = mlp(p["ffn"], h, cfg.mlp_act), 0.0
+    return x + y, aux
+
+
+def block_train(p, cfg: ModelConfig, spec: BlockSpec, x, positions,
+                collect_cache: bool, memory_kv=None, causal: bool = True):
+    """Returns (x, aux_loss, cache_entry_or_None)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache = None
+    if spec.kind == "attn":
+        if causal:
+            y, k, v = attn.attention_train(p["mixer"], cfg, h, positions)
+            if collect_cache:
+                cache = {"k": k, "v": v}
+        else:
+            y = attn.attention_encoder(p["mixer"], cfg, h, positions)
+    else:
+        if collect_cache:
+            y, state = ssm_lib.ssm_train(p["mixer"], cfg, h, return_state=True)
+            cache = state
+        else:
+            y = ssm_lib.ssm_train(p["mixer"], cfg, h)
+    x = x + y
+    if memory_kv is not None:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.attention_cross(p["cross"], cfg, hx, memory_kv, positions)
+    x, aux = _ffn_apply(p, cfg, spec, x)
+    return x, aux, cache
+
+
+def block_decode(p, cfg: ModelConfig, spec: BlockSpec, x, cache, pos,
+                 memory_kv=None):
+    """Returns (x, new_cache_entry)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        y, k, v = attn.attention_decode(p["mixer"], cfg, h,
+                                        cache["k"], cache["v"], pos)
+        new_cache = {"k": k, "v": v}
+    else:
+        y, new_cache = ssm_lib.ssm_decode(p["mixer"], cfg, h, cache)
+    x = x + y
+    if memory_kv is not None:
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.attention_cross_decode(p["cross"], cfg, hx, memory_kv, pos)
+    x, _ = _ffn_apply(p, cfg, spec, x)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# superlayers (one pattern period)
+# ---------------------------------------------------------------------------
+
+def init_superlayer(key, cfg: ModelConfig, cross: bool = False):
+    pattern = cfg.layer_pattern()
+    keys = jax.random.split(key, len(pattern))
+    return {f"block{i}": init_block(keys[i], cfg, spec, cross=cross)
+            for i, spec in enumerate(pattern)}
+
+
+def superlayer_train(params, cfg: ModelConfig, x, positions,
+                     collect_cache: bool = False, memory_kv=None,
+                     causal: bool = True):
+    pattern = cfg.layer_pattern()
+    aux_total = 0.0
+    caches = {}
+    for i, spec in enumerate(pattern):
+        x, aux, cache = block_train(
+            params[f"block{i}"], cfg, spec, x, positions, collect_cache,
+            memory_kv=memory_kv, causal=causal)
+        aux_total = aux_total + aux
+        if collect_cache and cache is not None:
+            caches[f"block{i}"] = cache
+    return x, aux_total, caches
+
+
+def superlayer_decode(params, cfg: ModelConfig, x, cache, pos, memory_kv=None):
+    pattern = cfg.layer_pattern()
+    new_cache = {}
+    for i, spec in enumerate(pattern):
+        entry = cache.get(f"block{i}") if isinstance(cache, dict) else None
+        x, ncache = block_decode(params[f"block{i}"], cfg, spec, x,
+                                 entry, pos, memory_kv=memory_kv)
+        new_cache[f"block{i}"] = ncache
+    return x, new_cache
+
+
+def init_superlayer_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                          dtype=jnp.bfloat16):
+    """Abstract/zero cache for one superlayer."""
+    pattern = cfg.layer_pattern()
+    out = {}
+    for i, spec in enumerate(pattern):
+        if spec.kind == "attn":
+            out[f"block{i}"] = {
+                "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+            }
+        else:
+            out[f"block{i}"] = ssm_lib.init_ssm_cache(cfg, batch)
+    return out

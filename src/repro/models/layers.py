@@ -1,0 +1,121 @@
+"""Primitive layers (pure functions over param pytrees).
+
+Parameters are nested dicts of jnp arrays. Every ``init_*`` is jittable
+(usable under ``jax.eval_shape`` for the allocation-free dry-run) and
+every ``apply`` is shape-polymorphic in batch/sequence.
+
+Numerics policy: parameters live in fp32; matmuls run in the config
+compute dtype (bf16 on TPU) with fp32 accumulation via
+``preferred_element_type``; norms and logits stay fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """qk-norm (per-head RMS norm over head_dim), qwen3-style."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# -- dense -------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": truncated_normal(key, (d_in, d_out), scale)}
+
+
+def dense(params, x, compute_dtype=jnp.bfloat16):
+    w = params["w"].astype(compute_dtype)
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), w,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(compute_dtype)
+
+
+# -- embeddings --------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int):
+    # d^-0.5 keeps unembed logits O(1) at init (CE starts near ln(vocab))
+    return {"table": truncated_normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(params, ids, compute_dtype=jnp.bfloat16):
+    return jnp.take(params["table"], ids, axis=0).astype(compute_dtype)
+
+
+def unembed(params, x):
+    """Logits in fp32 (vocab typically sharded over the model axis)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32),
+        params["table"].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    angles = angles[..., None, :]                         # [..., S, 1, Dh/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- activations --------------------------------------------------------------
+
+def activation(name: str):
+    if name == "swiglu":  # handled by the caller (gated)
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": init_dense(k1, d, ff), "w_down": init_dense(k2, ff, d)}
+    if act == "swiglu":
+        p["w_gate"] = init_dense(k3, d, ff)
+    return p
+
+
+def mlp(params, x, act: str, compute_dtype=jnp.bfloat16):
+    h = dense(params["w_up"], x, compute_dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(params["w_gate"], x, compute_dtype)) * h
+    else:
+        h = activation(act)(h)
+    return dense(params["w_down"], h, compute_dtype)

@@ -1,0 +1,335 @@
+"""Top-level models: causal LM (dense/MoE/SSM/hybrid/VLM) and enc-dec.
+
+Functional API over nested-dict params:
+
+  * :func:`init_params`   — jittable (works under ``jax.eval_shape`` for
+    the allocation-free dry-run).
+  * :func:`forward_train` — loss over a batch (scan over superlayers with
+    rematerialization).
+  * :func:`prefill`       — run the prompt, return (last-position logits,
+    cache pytree) for decoding.
+  * :func:`decode_step`   — one token against the cache.
+  * :func:`init_cache`    — zero/abstract cache (decode dry-run entry).
+
+Batch dicts:
+  LM:      {"tokens": [B,S] int32}                (labels = shifted tokens)
+  VLM:     {"tokens": [B,S_text], "patches": [B,P,D]}
+  enc-dec: {"frames": [B,S_enc,D], "dec_tokens": [B,S_dec]}
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .attention import _project_kv
+from .config import BlockSpec, ModelConfig
+from .layers import dense, embed, init_dense, init_embedding, init_mlp, \
+    init_rmsnorm, mlp, rmsnorm, unembed
+from .sharding_hooks import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 8)
+    p = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+        "unembed": init_embedding(keys[1], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    reps = cfg.num_superlayers
+    layer_keys = jax.random.split(keys[2], reps)
+    cross = cfg.is_encdec
+    p["layers"] = jax.vmap(
+        lambda k: blocks.init_superlayer(k, cfg, cross=cross))(layer_keys)
+    if cfg.first_dense_ff:
+        kp1, kp2 = jax.random.split(keys[3])
+        p["prefix"] = blocks.init_block(kp1, cfg, BlockSpec(kind="attn"))
+        # override ffn with the wide dense FFN (deepseek layer 0)
+        p["prefix"]["ffn"] = init_mlp(kp2, cfg.d_model, cfg.first_dense_ff,
+                                      cfg.mlp_act)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[4], cfg.encoder_layers)
+        enc_spec = BlockSpec(kind="attn")
+        p["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: blocks.init_block(k, cfg, enc_spec))(enc_keys),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+    if cfg.frontend == "vision":
+        p["frontend"] = init_dense(keys[5], cfg.d_model, cfg.d_model)
+    elif cfg.frontend == "audio":
+        p["frontend"] = init_dense(keys[5], cfg.d_model, cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# backbone scan
+# ---------------------------------------------------------------------------
+
+def _scan_train(params, cfg: ModelConfig, x, positions, memory_kv=None,
+                collect_cache: bool = False):
+    """Scan superlayers; returns (x, aux, stacked_cache|None).
+
+    ``memory_kv`` (enc-dec) is stacked per-superlayer and sliced by the
+    scan alongside the layer parameters."""
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_params, mem = xs
+        h, a, cache = blocks.superlayer_train(
+            layer_params, cfg, h, positions,
+            collect_cache=collect_cache, memory_kv=mem)
+        return (h, aux + a), (cache if collect_cache else 0)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), caches = jax.lax.scan(body, (x, 0.0),
+                                    (params["layers"], memory_kv))
+    return x, aux, (caches if collect_cache else None)
+
+
+def _scan_decode(params, cfg: ModelConfig, x, cache, pos, memory_kv=None):
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        h, new_cache = blocks.superlayer_decode(
+            layer_params, cfg, h, layer_cache, pos, memory_kv=memory_kv)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    return x, new_caches
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Encoder stack over (stub) frame embeddings [B, S_enc, D]."""
+    spec = BlockSpec(kind="attn")
+    x = dense(params["frontend"], frames) if "frontend" in params else frames
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, layer_params):
+        h2, _, _ = blocks.block_train(layer_params, cfg, spec, h, positions,
+                                      collect_cache=False, causal=False)
+        return h2, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), x,
+                        params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+ modality) embedding -> (x, positions, loss_mask, labels)."""
+    if cfg.is_encdec:
+        tokens = batch["dec_tokens"]
+        x = embed(params["embed"], tokens)
+        positions = jnp.arange(x.shape[1])[None, :]
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones(tokens.shape, bool).at[:, -1].set(False)
+        return x, positions, mask, labels
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = dense(params["frontend"], batch["patches"].astype(x.dtype))
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        text_mask = jnp.concatenate(
+            [jnp.zeros(pe.shape[:2], bool), jnp.ones(tokens.shape, bool)],
+            axis=1)
+    else:
+        text_mask = jnp.ones(tokens.shape, bool)
+    positions = jnp.arange(x.shape[1])[None, :]
+    full_tokens = jnp.concatenate(
+        [jnp.zeros((x.shape[0], x.shape[1] - tokens.shape[1]), tokens.dtype),
+         tokens], axis=1)
+    labels = jnp.pad(full_tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = text_mask & jnp.ones(labels.shape, bool).at[:, -1].set(False)
+    return x, positions, mask, labels
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def _chunked_ce(params, cfg: ModelConfig, x, labels, mask,
+                chunk_tokens: int = 16_384):
+    """Cross-entropy without materializing full [T, V] logits.
+
+    Scans over token chunks; each chunk's logits are live only inside one
+    loop iteration, bounding logits memory to chunk_tokens x V regardless
+    of batch/sequence (big-vocab configs would otherwise blow HBM)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+    mf = mask.reshape(t)
+    chunk = min(chunk_tokens, t)
+    pad = (-t) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad))
+        mf = jnp.pad(mf, (0, pad))
+    nc = xf.shape[0] // chunk
+
+    def body(carry, xs):
+        xc, lc, mc = xs
+        logits = unembed(params["unembed"], xc)
+        logits = constrain(logits, "logits")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return carry + jnp.sum((logz - gold) * mc), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (xf.reshape(nc, chunk, d), lf.reshape(nc, chunk),
+         mf.reshape(nc, chunk)))
+    return total
+
+
+def forward_train(params, cfg: ModelConfig, batch, aux_weight: float = 0.01,
+                  loss_chunk: int = 16_384):
+    """Returns (loss, metrics)."""
+    x, positions, mask, labels = _embed_inputs(params, cfg, batch)
+    memory_kv = None
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, batch["frames"].astype(x.dtype))
+        memory_kv = _prepare_memory(params, cfg, memory)
+    if "prefix" in params:
+        x, _, _ = blocks.block_train(params["prefix"], cfg,
+                                     BlockSpec(kind="attn"), x, positions,
+                                     collect_cache=False)
+    x, aux, _ = _scan_train(params, cfg, x, positions, memory_kv=memory_kv)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = constrain(x, "pre_logits")
+    nll_sum = _chunked_ce(params, cfg, x, labels, mask, loss_chunk)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = nll_sum / denom
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "tokens": denom.astype(jnp.float32)}
+
+
+def _prepare_memory(params, cfg: ModelConfig, memory):
+    """Encoder memory is kept raw; cross-attn projects K/V per layer.
+
+    To keep the decode path cheap we precompute per-superlayer K/V once:
+    stacked [R, B, S_enc, Hkv, Dh]."""
+    def per_layer(layer_params):
+        block0 = layer_params["block0"]
+        pos = jnp.arange(memory.shape[1])[None, :]
+        k, v = _project_kv(block0["cross"], cfg, memory, pos, rope=False)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["layers"])
+    return ks, vs
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16, enc_len: int = 0):
+    """Zero cache pytree (pass through jax.eval_shape for the dry-run)."""
+    one = blocks.init_superlayer_cache(cfg, batch, cache_len, dtype)
+    reps = cfg.num_superlayers
+    layers = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one)
+    cache = {"layers": layers}
+    if cfg.first_dense_ff:
+        cache["prefix"] = blocks.init_superlayer_cache(
+            cfg, batch, cache_len, dtype)["block0"]
+    if cfg.is_encdec:
+        cache["memory_kv"] = (
+            jnp.zeros((reps, batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                      dtype),
+            jnp.zeros((reps, batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                      dtype))
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int | None = None):
+    """Run the full prompt; returns (last-position logits, cache)."""
+    x, positions, _, _ = _embed_inputs(params, cfg, batch)
+    s_prompt = x.shape[1]
+    cache_len = cache_len or s_prompt
+    memory_kv = None
+    cache = {}
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, batch["frames"].astype(x.dtype))
+        memory_kv = _prepare_memory(params, cfg, memory)
+        cache["memory_kv"] = memory_kv
+    if "prefix" in params:
+        x, _, pcache = blocks.block_train(
+            params["prefix"], cfg, BlockSpec(kind="attn"), x, positions,
+            collect_cache=True)
+        cache["prefix"] = _pad_kv(pcache, cache_len)
+    x, _, caches = _scan_train(params, cfg, x, positions,
+                               memory_kv=memory_kv, collect_cache=True)
+    cache["layers"] = jax.tree_util.tree_map_with_path(
+        lambda path, a: _pad_stacked(path, a, cache_len), caches)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x[:, -1:])
+    return logits, cache
+
+
+def _fit_kv_seq(a, cache_len, axis):
+    """Pad K/V to cache_len, or — for sliding-window ring caches shorter
+    than the prompt — keep the trailing window, rolled so each position p
+    sits at slot p % cache_len (future ring writes then overwrite the
+    oldest entry; stored K carries absolute RoPE so slot order is free).
+    """
+    s = a.shape[axis]
+    pad = cache_len - s
+    if pad >= 0:
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+    tail = jax.lax.slice_in_dim(a, s - cache_len, s, axis=axis)
+    return jnp.roll(tail, shift=s % cache_len, axis=axis)
+
+
+def _pad_kv(entry, cache_len):
+    return {name: (_fit_kv_seq(a, cache_len, axis=1)
+                   if name in ("k", "v") else a)
+            for name, a in entry.items()}
+
+
+def _pad_stacked(path, a, cache_len):
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    if names and names[-1] in ("k", "v"):
+        return _fit_kv_seq(a, cache_len, axis=2)
+    return a
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """tokens: [B,1] int32; pos: int32 scalar (next position).
+
+    Returns (logits [B,1,V], new_cache)."""
+    x = embed(params["embed"], tokens)
+    memory_kv = cache.get("memory_kv")
+    new_cache = dict(cache)
+    if "prefix" in params:
+        x, pc = blocks.block_decode(params["prefix"], cfg,
+                                    BlockSpec(kind="attn"),
+                                    x, cache["prefix"], pos)
+        new_cache["prefix"] = pc
+
+    if memory_kv is not None:
+        # per-superlayer memory: slice inside the scan
+        def body(h, xs):
+            layer_params, layer_cache, mem_k, mem_v = xs
+            h, nc = blocks.superlayer_decode(layer_params, cfg, h,
+                                             layer_cache, pos,
+                                             memory_kv=(mem_k, mem_v))
+            return h, nc
+        x, layers = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"],
+                      memory_kv[0], memory_kv[1]))
+    else:
+        x, layers = _scan_decode(params, cfg, x, cache, pos)
+    new_cache["layers"] = layers
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x)
+    return logits, new_cache

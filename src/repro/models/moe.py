@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with gather-based capacity dispatch.
+
+Design for TPU/GSPMD (DESIGN.md §5): no [T, E, C] one-hot dispatch tensor
+is ever built. Tokens' (token, choice) pairs are sorted by expert id;
+slot positions come from a per-expert running count; dispatch is a gather
+``x[dispatch_idx]`` into an [E, C, D] buffer sharded over the model axis
+(expert parallelism), and the combine is a scatter-add back. Capacity is
+``ceil(T·k/E · capacity_factor)``; overflow tokens are dropped from the
+expert (their gate mass falls to the shared experts / residual), matching
+GShard-style capacity semantics.
+
+Supports DeepSeekMoE fine-grained experts + shared experts, and Mixtral
+top-2. When the expert count does not divide the model axis (mixtral: 8
+experts on a 16-way axis), expert weights shard over their ffn dim
+instead (tensor-parallel experts) — selected by the launch layer via
+sharding rules, not here.
+
+Returns an auxiliary load-balancing loss (Switch-style) for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_dense, init_mlp, mlp, truncated_normal
+from .sharding_hooks import constrain
+
+
+def init_moe(key, cfg: ModelConfig):
+    e = cfg.moe_num_experts
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    k_router, k_up, k_gate, k_down, k_shared = jax.random.split(key, 5)
+    p = {
+        "router": {"w": truncated_normal(k_router, (d, e), d ** -0.5)},
+        "w_up": truncated_normal(k_up, (e, d, ff), d ** -0.5),
+        "w_down": truncated_normal(k_down, (e, ff, d), ff ** -0.5),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = truncated_normal(k_gate, (e, d, ff), d ** -0.5)
+    if cfg.moe_num_shared:
+        p["shared"] = init_mlp(k_shared, d, ff * cfg.moe_num_shared,
+                               cfg.mlp_act)
+    return p
+
+
+def _expert_ffn(p, xe, act: str, compute_dtype=jnp.bfloat16):
+    """xe: [E, C, D] -> [E, C, D] (per-expert MLP via batched einsum)."""
+    up = jnp.einsum("ecd,edf->ecf", xe.astype(compute_dtype),
+                    p["w_up"].astype(compute_dtype),
+                    preferred_element_type=jnp.float32).astype(compute_dtype)
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe.astype(compute_dtype),
+                       p["w_gate"].astype(compute_dtype),
+                       preferred_element_type=jnp.float32).astype(compute_dtype)
+        up = jax.nn.silu(g) * up
+    elif act == "relu2":
+        up = jnp.square(jax.nn.relu(up))
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, p["w_down"].astype(compute_dtype),
+                      preferred_element_type=jnp.float32).astype(compute_dtype)
+
+
+def moe_mlp(params, cfg: ModelConfig, x):
+    """x: [B, S, D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    t = b * s
+    # capacity: GShard-style for large T; for small T (decode) admit the
+    # worst case (all tokens to one expert) so decoding is drop-free.
+    cap = int(max((t * k * cfg.moe_capacity_factor) // e, min(t, 256), 1))
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)         # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = jnp.sum(density * density_proxy) * e
+
+    # ---- dispatch: sort (token, choice) pairs by expert --------------
+    e_flat = expert_idx.reshape(-1)                         # [T*k]
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    counts = jnp.bincount(e_flat, length=e)                 # [E]
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+    keep = slot < cap
+
+    # dispatch indices [E, C]; sentinel t = zero row
+    disp = jnp.full((e, cap), t, jnp.int32)
+    disp = disp.at[e_sorted, slot].set(tok_sorted, mode="drop")
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xe = xpad[disp]                                         # [E, C, D]
+    xe = constrain(xe, "moe_dispatch")
+
+    ye = _expert_ffn(params, xe, cfg.mlp_act)               # [E, C, D]
+    ye = constrain(ye, "moe_expert_out")
+
+    # ---- combine: gather back per pair, weight, scatter-add ----------
+    val = ye[e_sorted, jnp.minimum(slot, cap - 1)]          # [T*k, D]
+    val = jnp.where(keep[:, None], val, 0)
+    gate_sorted = gate_vals.reshape(-1)[order].astype(val.dtype)
+    out = jnp.zeros((t, d), val.dtype).at[tok_sorted].add(val * gate_sorted[:, None])
+
+    if cfg.moe_num_shared:
+        out = out + mlp(params["shared"], xf, cfg.mlp_act)
+    return out.reshape(b, s, d).astype(x.dtype), aux_loss

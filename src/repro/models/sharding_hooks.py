@@ -1,0 +1,41 @@
+"""Pluggable internal sharding constraints.
+
+Model code calls ``constrain(x, "site-name")`` at collective-critical
+activations (MoE dispatch, attention heads, logits). By default this is
+the identity; the launch layer registers concrete ``PartitionSpec``s per
+site when lowering under a mesh. This keeps model definitions
+mesh-agnostic while giving the perf loop (EXPERIMENTS.md §Perf) a clean
+lever to re-shard individual sites without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_local = threading.local()
+
+
+def _registry() -> dict:
+    if not hasattr(_local, "specs"):
+        _local.specs = {}
+    return _local.specs
+
+
+@contextlib.contextmanager
+def sharding_site_specs(specs: dict):
+    """Register {site-name: PartitionSpec} for the enclosed trace."""
+    old = dict(_registry())
+    _registry().update(specs)
+    try:
+        yield
+    finally:
+        _local.specs = old
+
+
+def constrain(x, site: str):
+    spec = _registry().get(site)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

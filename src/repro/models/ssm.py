@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+Chunked SSD forward for training/prefill (`lax.scan` over chunks carries
+the inter-chunk SSM state, the intra-chunk part is a masked quadratic
+form over a small chunk — MXU friendly), plus the O(1) recurrent decode
+step. Single B/C group shared across heads.
+
+State carried for serving: (conv_state [B, conv_dim, W-1],
+ssd_state [B, H, P, N]). This per-session state is exactly the "cached
+object" the ETICA two-tier controller manages for SSM architectures
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_dense, truncated_normal
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * n + h),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_conv, conv_dim), 0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[2], di, d),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xs, B, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                                axis=-1)
+    return z, xs, B, C, dt
+
+
+def _gated_norm(scale, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _causal_conv(w, b, x):
+    """Depthwise causal conv, x: [B, S, C], w: [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b).astype(x.dtype)
+
+
+def _segsum(x):
+    """segsum[..., i, j] = sum_{k in (j, i]} x[..., k] (lower-triangular)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_train(params, cfg: ModelConfig, x, return_state: bool = False):
+    """Chunked SSD scan. x: [B, S, D] -> [B, S, D] (and the final state
+    when ``return_state`` — used by prefill to seed decoding)."""
+    b, s_real, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s_real)
+    # pad to a chunk multiple; padded positions get dt = 0, which makes
+    # them exact no-ops on the SSM state (decay exp(0)=1, no input).
+    s = ((s_real + q - 1) // q) * q
+    if s != s_real:
+        x = jnp.pad(x, ((0, 0), (0, s - s_real), (0, 0)))
+    nc = s // q
+
+    proj = jnp.einsum("bsd,de->bse", x.astype(jnp.bfloat16),
+                      params["in_proj"]["w"].astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32)
+    z, xs, B, C, dt = _split_proj(cfg, proj)
+    xBC_raw = jnp.concatenate([xs, B, C], axis=-1)
+    xBC = _causal_conv(params["conv_w"], params["conv_b"], xBC_raw)
+    xs, B, C = jnp.split(xBC, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    if s != s_real:
+        valid = (jnp.arange(s) < s_real)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(params["A_log"])                                     # [H]
+    xh = xs.reshape(b, s, h, p).astype(jnp.float32)
+    dA = dt * A                                                       # [B,S,H]
+
+    # chunk
+    xc = xh.reshape(b, nc, q, h, p)
+    Bc = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    dAc = dA.reshape(b, nc, q, h)
+
+    def chunk_step(state, inp):
+        xck, Bk, Ck, dtk, dAk = inp            # [b,q,h,p],[b,q,n],...
+        # intra-chunk (quadratic within chunk)
+        L = jnp.exp(_segsum(dAk.transpose(0, 2, 1)))       # [b,h,q,q]
+        scores = jnp.einsum("bqn,bkn->bqk", Ck, Bk)        # [b,q,q]
+        M = scores[:, None] * L                            # [b,h,q,q]
+        y_intra = jnp.einsum("bhqk,bkh,bkhp->bqhp", M, dtk, xck)
+        # contribution of the carried state
+        decay0 = jnp.exp(jnp.cumsum(dAk, axis=1))          # [b,q,h]
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", Ck, state, decay0)
+        # chunk's new state
+        decay_end = jnp.exp(jnp.sum(dAk, axis=1))          # [b,h]
+        decay_to_end = jnp.exp(jnp.sum(dAk, axis=1)[:, None] -
+                               jnp.cumsum(dAk, axis=1))    # [b,q,h]
+        s_new = jnp.einsum("bqn,bqh,bqhp->bhpn", Bk, dtk * decay_to_end, xck)
+        state = state * decay_end[..., None, None] + s_new
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    state_fin, yc = jax.lax.scan(
+        chunk_step, state0,
+        (xc.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+         Cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+         dAc.transpose(1, 0, 2, 3)))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y.astype(jnp.bfloat16),
+                     params["out_proj"]["w"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out[:, :s_real]
+    if not return_state:
+        return out
+    w = cfg.ssm_conv
+    tail = xBC_raw[:, :s_real][:, -(w - 1):, :].astype(jnp.float32)
+    if s_real < w - 1:
+        tail = jnp.pad(tail, ((0, 0), (w - 1 - s_real, 0), (0, 0)))
+    return out, {"conv": tail, "ssd": state_fin}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+    }
+
+
+def ssm_decode(params, cfg: ModelConfig, x, cache):
+    """One-token recurrent step. x: [B, 1, D]."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x.astype(jnp.bfloat16),
+                      params["in_proj"]["w"].astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32)
+    z, xs, B, C, dt = _split_proj(cfg, proj)
+    xBC_new = jnp.concatenate([xs, B, C], axis=-1)          # [B,1,conv_dim]
+    window = jnp.concatenate([cache["conv"], xBC_new.astype(cache["conv"].dtype)],
+                             axis=1)                         # [B,W,conv_dim]
+    conv_out = jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]                 # [B,1,conv_dim]
+    xs, B, C = jnp.split(xBC, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                    # [B,H]
+    xh = xs[:, 0].reshape(b, h, p).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                        # [B,N]
+    Cv = C[:, 0].astype(jnp.float32)
+    ssd = cache["ssd"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", ssd, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y.astype(jnp.bfloat16),
+                     params["out_proj"]["w"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "ssd": ssd.astype(cache["ssd"].dtype)}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from .generators import SPECS, WorkloadSpec, generate, make, names
+
+__all__ = ["SPECS", "WorkloadSpec", "generate", "make", "names"]

@@ -1,0 +1,177 @@
+"""Synthetic workload generators modeled on the paper's trace suite.
+
+The paper evaluates with MSR Cambridge traces (SNIA IOTTA) and
+FIO/Filebench workloads. Those traces are not redistributable inside this
+container, so each family is modeled as a parameterized generator that
+reproduces the *characteristics the paper relies on*: read/write mix,
+locality (zipf re-reference), sequentiality, working-set size, and
+RAW-vs-RAR structure. Every generator is deterministic given a seed.
+
+Families (paper §5.1 and Table 2):
+
+====================  =========================================================
+hm_1                  hardware monitoring — random reads, high locality
+mds_0 / mds_1         media server — sequential (streaming) reads, low locality
+src2_0 / src1_2       source control — small writes with heavy RAW re-reads
+stg_1                 web staging — write-intensive random
+ts_0                  terminal server — RAW/RARAW-heavy mixed
+wdev_0                test web server — writes followed by repeated reads (RAW)
+web_3                 web/SQL server — read-intensive, mostly cold reads
+rsrch_0               research projects — write-heavy with moderate RAW
+usr_0                 user home dirs — write-dominated, popular written blocks
+proj_0                project dirs — mixed, moderate locality
+fio_randrw            FIO RandRW 70% read zipf(1.1) (motivational Fig. 3a)
+web_server            Filebench Web Server — random cold reads (Fig. 3b)
+video_server          Filebench Video Server — pure sequential reads (Fig. 3c)
+varmail               Filebench Varmail — 50/50 random read/write (Fig. 3d)
+====================  =========================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.trace import Trace
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    """Knobs shared by all generators."""
+    read_ratio: float = 0.7         # fraction of reads
+    working_set: int = 4096         # distinct blocks
+    zipf_a: float = 1.1             # skew of the re-reference distribution
+    sequential: float = 0.0         # fraction of sequential runs
+    raw_fraction: float = 0.0       # fraction of reads directed at
+                                    # recently-written blocks (RAW structure)
+    cold_fraction: float = 0.0      # fraction of reads to never-reused blocks
+    write_burst: float = 0.0        # fraction of writes redirected to
+                                    # one-shot addresses (scans/installs/log
+                                    # writes — the pollution that penalizes
+                                    # push-mode caches, paper §4.2)
+    run_length: int = 64            # blocks per sequential run
+
+
+def _zipf_ranks(rng: np.random.Generator, n: int, size: int, a: float):
+    """Zipf-distributed ranks in [0, size) (bounded, vectorized)."""
+    ranks = np.arange(1, size + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    return rng.choice(size, size=n, p=p)
+
+
+def generate(spec: WorkloadSpec, n: int, seed: int = 0,
+             addr_offset: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    addr = np.zeros(n, np.int64)
+    is_write = rng.random(n) >= spec.read_ratio
+
+    # permute the working set so zipf-hot blocks are scattered over sets
+    perm = rng.permutation(spec.working_set)
+
+    n_seq = int(n * spec.sequential)
+    n_rand = n - n_seq
+
+    # random (zipf) part
+    hot = perm[_zipf_ranks(rng, n_rand, spec.working_set, spec.zipf_a)]
+    addr[:n_rand] = hot
+
+    # sequential runs (streaming) — walk fresh address space
+    if n_seq:
+        base = spec.working_set
+        runs = np.maximum(spec.run_length, 1)
+        steps = np.arange(n_seq)
+        addr[n_rand:] = base + steps  # one long scan
+        is_write[n_rand:] = rng.random(n_seq) >= spec.read_ratio
+
+    # interleave sequential into random positions to avoid phase artifacts
+    order = rng.permutation(n)
+    addr = addr[order]
+    is_write = is_write[order]
+
+    # cold reads: redirect a fraction of reads to one-shot addresses
+    if spec.cold_fraction > 0:
+        reads = np.nonzero(~is_write)[0]
+        k = int(len(reads) * spec.cold_fraction)
+        if k:
+            pick = rng.choice(reads, size=k, replace=False)
+            addr[pick] = spec.working_set + n + np.arange(k)
+
+    # write bursts: one-shot writes with no future references (pollution)
+    if spec.write_burst > 0:
+        writes = np.nonzero(is_write)[0]
+        k = int(len(writes) * spec.write_burst)
+        if k:
+            pick = rng.choice(writes, size=k, replace=False)
+            addr[pick] = spec.working_set + 2 * n + np.arange(k)
+
+    # RAW structure: redirect a fraction of reads to the most recent writes
+    if spec.raw_fraction > 0:
+        write_pos = np.nonzero(is_write)[0]
+        reads = np.nonzero(~is_write)[0]
+        k = int(len(reads) * spec.raw_fraction)
+        if k and write_pos.size:
+            pick = rng.choice(reads, size=k, replace=False)
+            for i in pick:
+                prev_w = write_pos[write_pos < i]
+                if prev_w.size:
+                    # read one of the last few written blocks (RAW / RARAW)
+                    j = prev_w[-1 - rng.integers(0, min(8, prev_w.size))]
+                    addr[i] = addr[j]
+
+    return Trace(addr=(addr + addr_offset).astype(np.int32),
+                 is_write=is_write)
+
+
+# -- named families ---------------------------------------------------------
+
+SPECS: dict[str, WorkloadSpec] = {
+    "hm_1": WorkloadSpec(read_ratio=0.95, working_set=2048, zipf_a=1.4,
+                         cold_fraction=0.02),
+    "mds_0": WorkloadSpec(read_ratio=0.9, working_set=512, sequential=0.9,
+                          zipf_a=1.05),
+    "mds_1": WorkloadSpec(read_ratio=0.98, working_set=256, sequential=0.97,
+                          zipf_a=1.01, cold_fraction=0.5),
+    "src2_0": WorkloadSpec(read_ratio=0.4, working_set=1024, zipf_a=1.55,
+                           raw_fraction=0.7),
+    "src1_2": WorkloadSpec(read_ratio=0.45, working_set=1536, zipf_a=1.15,
+                           raw_fraction=0.5),
+    "stg_1": WorkloadSpec(read_ratio=0.25, working_set=4096, zipf_a=1.35,
+                          write_burst=0.15),
+    "ts_0": WorkloadSpec(read_ratio=0.55, working_set=1024, zipf_a=1.6,
+                         raw_fraction=0.8),
+    "wdev_0": WorkloadSpec(read_ratio=0.5, working_set=768, zipf_a=1.7,
+                           raw_fraction=0.85),
+    "web_3": WorkloadSpec(read_ratio=0.97, working_set=8192, zipf_a=1.02,
+                          cold_fraction=0.6),
+    "rsrch_0": WorkloadSpec(read_ratio=0.3, working_set=2048, zipf_a=1.5,
+                            raw_fraction=0.3),
+    "usr_0": WorkloadSpec(read_ratio=0.2, working_set=1536, zipf_a=1.7,
+                          raw_fraction=0.6),
+    "proj_0": WorkloadSpec(read_ratio=0.6, working_set=3072, zipf_a=1.15,
+                           raw_fraction=0.2, cold_fraction=0.1),
+    # motivational (Fig. 3) workloads
+    "fio_randrw": WorkloadSpec(read_ratio=0.7, working_set=8192, zipf_a=1.1,
+                               raw_fraction=0.5),
+    "web_server": WorkloadSpec(read_ratio=0.9, working_set=16384, zipf_a=1.01,
+                               cold_fraction=0.7),
+    "video_server": WorkloadSpec(read_ratio=1.0, working_set=64,
+                                 sequential=1.0, cold_fraction=0.0),
+    "varmail": WorkloadSpec(read_ratio=0.5, working_set=4096, zipf_a=1.1,
+                            raw_fraction=0.25),
+}
+
+
+def make(name: str, n: int, seed: int = 0, addr_offset: int = 0,
+         scale: float = 1.0) -> Trace:
+    """Instantiate a named workload; ``scale`` shrinks the working set for
+    CPU-friendly benchmark sizes while preserving the mix."""
+    spec = SPECS[name]
+    if scale != 1.0:
+        spec = dataclasses.replace(
+            spec, working_set=max(int(spec.working_set * scale), 16))
+    return generate(spec, n, seed=seed, addr_offset=addr_offset)
+
+
+def names() -> list[str]:
+    return list(SPECS)

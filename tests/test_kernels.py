@@ -1,0 +1,139 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Policy, pod_distances
+from repro.kernels.decode_attention.kernel import paged_decode_attention
+from repro.kernels.decode_attention.ref import paged_decode_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.popularity.kernel import popularity
+from repro.kernels.popularity.ref import popularity_ref
+from repro.kernels.reuse_distance.kernel import count_between
+from repro.kernels.reuse_distance.ops import reuse_distances
+from repro.kernels.reuse_distance.ref import count_between_ref
+
+
+class TestReuseDistanceKernel:
+    @pytest.mark.parametrize("n", [17, 64, 257, 1024, 3000])
+    def test_vs_ref(self, n):
+        rng = np.random.default_rng(n)
+        prev = rng.integers(-1, n, n).astype(np.int32)
+        touch = rng.integers(0, 2, n).astype(np.int32)
+        nt = rng.integers(0, n + 1, n).astype(np.int32)
+        got = count_between(jnp.asarray(prev), jnp.asarray(touch),
+                            jnp.asarray(nt))
+        want = count_between_ref(jnp.asarray(prev), jnp.asarray(touch),
+                                 jnp.asarray(nt))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("policy", [Policy.WB, Policy.RO, Policy.WBWO])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_pipeline_vs_core_engine(self, policy, seed):
+        rng = np.random.default_rng(seed)
+        n = 400
+        addr = rng.integers(0, 50, n).astype(np.int32)
+        w = rng.random(n) < 0.4
+        got = reuse_distances(addr, w, policy)
+        want = pod_distances(addr, w, policy)
+        np.testing.assert_array_equal(np.asarray(got.dist),
+                                      np.asarray(want.dist))
+
+    @pytest.mark.parametrize("ti,tj", [(64, 128), (128, 256), (256, 512)])
+    def test_tile_shapes(self, ti, tj):
+        rng = np.random.default_rng(7)
+        n = 777
+        prev = rng.integers(-1, n, n).astype(np.int32)
+        touch = rng.integers(0, 2, n).astype(np.int32)
+        nt = rng.integers(0, n + 1, n).astype(np.int32)
+        got = count_between(jnp.asarray(prev), jnp.asarray(touch),
+                            jnp.asarray(nt), ti=ti, tj=tj)
+        want = count_between_ref(jnp.asarray(prev), jnp.asarray(touch),
+                                 jnp.asarray(nt))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestPopularityKernel:
+    @pytest.mark.parametrize("n,nb", [(64, 5), (1000, 300), (5000, 997)])
+    @pytest.mark.parametrize("cs", [1.0, 64.0, 4096.0])
+    def test_vs_ref(self, n, nb, cs):
+        rng = np.random.default_rng(n + int(cs))
+        dist = rng.integers(-1, 300, n).astype(np.int32)
+        served = rng.integers(0, 2, n).astype(bool)
+        seg = rng.integers(0, nb, n).astype(np.int32)
+        got = popularity(jnp.asarray(dist), jnp.asarray(served),
+                         jnp.asarray(seg), nb, cs)
+        want = popularity_ref(jnp.asarray(dist), jnp.asarray(served),
+                              jnp.asarray(seg), nb, cs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,h,hkv,s,d", [
+        (1, 2, 1, 128, 32), (2, 4, 2, 256, 64), (1, 8, 8, 128, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal(self, b, h, hkv, s, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(b * h + s), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+        k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+        v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+        got = flash_attention(q, k, v, causal=True, tq=64, tk=64)
+        want = attention_ref(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=tol)
+
+    def test_sliding_window(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        got = flash_attention(q, k, v, causal=True, window=64, tq=64, tk=64)
+        want = attention_ref(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_non_causal(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 64))
+        k = jax.random.normal(ks[1], (1, 1, 128, 64))
+        v = jax.random.normal(ks[2], (1, 1, 128, 64))
+        got = flash_attention(q, k, v, causal=False, tq=64, tk=64)
+        want = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+
+class TestPagedDecodeKernel:
+    @pytest.mark.parametrize("b,h,hkv,d,np_,ps,npages", [
+        (2, 4, 2, 64, 16, 32, 4), (3, 8, 4, 128, 32, 16, 8),
+        (1, 2, 2, 32, 8, 64, 2)])
+    def test_vs_ref(self, b, h, hkv, d, np_, ps, npages):
+        ks = jax.random.split(jax.random.PRNGKey(b + h + d), 5)
+        q = jax.random.normal(ks[0], (b, h, d))
+        kp = jax.random.normal(ks[1], (np_, ps, hkv, d))
+        vp = jax.random.normal(ks[2], (np_, ps, hkv, d))
+        pt = jax.random.randint(ks[3], (b, npages), 0, np_)
+        lengths = jax.random.randint(ks[4], (b,), 1, npages * ps + 1)
+        got = paged_decode_attention(q, kp, vp, pt, lengths)
+        want = paged_decode_ref(q, kp, vp, pt, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_length_masking(self):
+        """Tokens beyond `lengths` must not influence the output."""
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (1, 2, 32))
+        kp = jax.random.normal(ks[1], (4, 16, 2, 32))
+        vp = jax.random.normal(ks[2], (4, 16, 2, 32))
+        pt = jnp.array([[0, 1]], jnp.int32)
+        out1 = paged_decode_attention(q, kp, vp, pt, jnp.array([20]))
+        kp2 = kp.at[1, 10:].set(999.0)   # poison beyond length
+        vp2 = vp.at[1, 10:].set(999.0)
+        out2 = paged_decode_attention(q, kp2, vp2, pt, jnp.array([20]))
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   atol=1e-6)

@@ -1,0 +1,82 @@
+"""Property-based invariants of the two-tier KV manager (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache import TwoTierConfig, TwoTierKVManager
+
+CFG = TwoTierConfig(page_size=4, hbm_pages=16, num_kv_heads=1, head_dim=4,
+                    num_layers=1, dtype="float32",
+                    maintenance_interval=8, resize_interval=32)
+
+
+def _ops():
+    return st.lists(
+        st.tuples(st.integers(0, 7),           # session id
+                  st.booleans()),              # append a page?
+        min_size=1, max_size=120)
+
+
+def _drive(ops):
+    mgr = TwoTierKVManager(CFG, num_tenants=2)
+    rng = np.random.default_rng(0)
+    for sid in range(8):
+        mgr.new_session(sid, sid % 2)
+    for sid, do_append in ops:
+        if do_append and len(mgr.sessions[sid].pages) < 4:
+            pg = rng.normal(size=(1, CFG.page_size, 1, 4)).astype(np.float32)
+            mgr.append_page(sid, pg, pg)
+        mgr.activate(sid)
+    return mgr
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
+def test_slot_accounting_consistent(ops):
+    """free + owned slots == pool size; owners and sessions agree."""
+    mgr = _drive(ops)
+    assert len(mgr.free) + len(mgr.slot_owner) == CFG.hbm_pages
+    for slot, (sid, lp) in mgr.slot_owner.items():
+        assert mgr.sessions[sid].hbm_slots.get(lp) == slot
+    owned = sum(len(s.hbm_slots) for s in mgr.sessions.values())
+    assert owned == len(mgr.slot_owner)
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
+def test_tier2_is_authoritative(ops):
+    """Every logical page of every session has a host (tier-2) copy —
+    the RO-tier reliability invariant: HBM loss can never lose data."""
+    mgr = _drive(ops)
+    for sid, sess in mgr.sessions.items():
+        for lp in sess.pages:
+            assert (sid, lp) in mgr.host
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
+def test_wbwo_write_bound(ops):
+    """Tier-2 DMA writes == pages generated exactly once (WBWO bound)."""
+    mgr = _drive(ops)
+    assert mgr.stats.dma_write_bytes == len(mgr.host) * CFG.page_bytes
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
+def test_activation_makes_resident(ops):
+    """After activate(sid), every page of sid is HBM-resident and its
+    page table points at slots owned by (sid, page)."""
+    mgr = _drive(ops)
+    for sid in range(8):
+        if not mgr.sessions[sid].pages:
+            continue
+        pt = mgr.activate(sid)
+        for lp, slot in enumerate(pt):
+            assert mgr.slot_owner[int(slot)] == (sid, lp)
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
+def test_quota_totals_bounded(ops):
+    mgr = _drive(ops)
+    assert mgr.tenant_quota.sum() <= CFG.hbm_pages + len(mgr.tenant_quota)
+    assert (mgr.tenant_used >= 0).all()

@@ -1,0 +1,86 @@
+"""PPC partitioning (Eq. 3) and popularity (Eq. 1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PopularityTracker, block_scores, contributions, partition
+
+
+def _mk_curves(v, grid):
+    rng = np.random.default_rng(v)
+    # concave-ish random hit curves, one per VM
+    raw = np.sort(rng.random((v, grid.size)), axis=1)
+    raw[:, 0] = 0.0
+    return raw
+
+
+class TestPartition:
+    GRID = np.array([0, 16, 32, 64, 128, 256], np.int64)
+
+    def test_under_capacity_returns_demands(self):
+        d = np.array([10, 20, 30])
+        res = partition(d, _mk_curves(3, self.GRID), self.GRID, 100)
+        assert not res.saturated
+        assert (res.alloc == d).all()
+
+    def test_over_capacity_respects_budget_and_demand(self):
+        d = np.array([256, 256, 256, 256])
+        res = partition(d, _mk_curves(4, self.GRID), self.GRID, 300)
+        assert res.saturated
+        assert res.alloc.sum() <= 300
+        assert (res.alloc <= d).all()
+
+    @given(st.integers(1, 6), st.integers(1, 500), st.integers(0, 10))
+    @settings(max_examples=25, deadline=None)
+    def test_property_budget_and_demand(self, v, cap, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.integers(0, 256, v)
+        res = partition(d, _mk_curves(v, self.GRID), self.GRID, cap)
+        assert res.alloc.sum() <= max(cap, d.sum())
+        if res.saturated:
+            assert res.alloc.sum() <= cap
+        assert (res.alloc <= np.maximum(d, 0)).all()
+
+    def test_knee_preferred(self):
+        """A VM with a sharp knee at 32 gets its knee before a flat VM
+        gets anything beyond minimum."""
+        grid = self.GRID
+        curves = np.zeros((2, grid.size))
+        curves[0] = np.where(grid >= 32, 0.9, 0.0)   # sharp knee at 32
+        curves[1] = grid / grid.max() * 0.2          # weak, flat
+        d = np.array([256, 256])
+        res = partition(d, curves, grid, 64)
+        assert res.alloc[0] >= 32
+
+
+class TestPopularity:
+    def test_eq1_shape(self):
+        dist = np.array([0, 10, 100, -1], np.int32)
+        served = np.array([True, True, True, False])
+        c = np.asarray(contributions(dist, served, cache_size=100))
+        # monotone decreasing in POD; cold access contributes 0
+        assert c[0] > c[1] > c[2] > 0
+        assert c[3] == 0
+        assert c[0] == pytest.approx(1.0)
+        assert c[2] == pytest.approx(np.exp(-1.0), rel=1e-5)
+
+    def test_frequency_accumulates(self):
+        addr = np.array([7, 7, 7, 9])
+        contrib = np.array([0.5, 0.5, 0.5, 0.9])
+        uniq, scores = block_scores(addr, contrib)
+        assert dict(zip(uniq.tolist(), scores.tolist())) == \
+            pytest.approx({7: 1.5, 9: 0.9})
+
+    def test_tracker_top_bottom(self):
+        t = PopularityTracker(decay=1.0)
+        t.update(np.array([1, 1, 2, 3]), np.array([1.0, 1.0, 0.5, 0.01]))
+        cands = np.array([1, 2, 3])
+        assert t.most_popular(cands, 0.3).tolist() == [1]
+        assert t.least_popular(cands, 0.3).tolist() == [3]
+
+    def test_tracker_decay(self):
+        t = PopularityTracker(decay=0.5)
+        t.update(np.array([1]), np.array([1.0]))
+        t.update(np.array([2]), np.array([1.0]))
+        assert t.score(1) == pytest.approx(0.5)
+        assert t.score(2) == pytest.approx(1.0)

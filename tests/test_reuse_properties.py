@@ -1,0 +1,113 @@
+"""Property-based tests of the reuse-distance engine (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Policy, Trace, hit_counts_at_sizes, pod,
+                        pod_distances, trd, trd_distances, urd,
+                        urd_distances)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def traces(min_size=1, max_size=200, addr_space=24):
+    return st.lists(
+        st.tuples(st.integers(0, addr_space - 1), st.booleans()),
+        min_size=min_size, max_size=max_size,
+    ).map(lambda ops: Trace(
+        addr=np.array([a for a, _ in ops], np.int32),
+        is_write=np.array([w for _, w in ops], bool)))
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_metric_ordering(tr):
+    """POD <= URD <= TRD for every trace and policy (paper's core claim:
+    POD never over-allocates relative to URD)."""
+    t, u = trd(tr), urd(tr)
+    assert u <= t
+    for p in (Policy.RO, Policy.WBWO, Policy.WB, Policy.WT, Policy.WO):
+        assert pod(tr, p) <= u, p
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_pod_wb_equals_urd(tr):
+    assert pod(tr, Policy.WB) == urd(tr)
+    assert pod(tr, Policy.WT) == urd(tr)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_read_only_trace_pod_ro_equals_urd(tr):
+    """With no writes, RO serves exactly what URD counts."""
+    tr = Trace(addr=tr.addr, is_write=np.zeros_like(tr.is_write))
+    assert pod(tr, Policy.RO) == urd(tr)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_served_have_distance_and_cold_dont(tr):
+    for p in (Policy.RO, Policy.WBWO, Policy.WB):
+        r = pod_distances(tr.addr, tr.is_write, p)
+        dist = np.asarray(r.dist)
+        served = np.asarray(r.served)
+        assert (dist[served] >= 0).all()
+        assert (dist[~served] == -1).all()
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_distance_bounded_by_distinct_addresses(tr):
+    bound = np.unique(np.asarray(tr.addr)).size
+    for p in (Policy.RO, Policy.WBWO, Policy.WB):
+        assert pod(tr, p) <= bound
+
+
+@given(traces(), st.integers(0, 3))
+@settings(**SETTINGS)
+def test_mrc_monotone_nondecreasing(tr, _):
+    sizes = np.array([0, 1, 2, 4, 8, 16, 64], np.int64)
+    for p in (Policy.RO, Policy.WBWO, Policy.WB):
+        r = pod_distances(tr.addr, tr.is_write, p)
+        hits = hit_counts_at_sizes(r.dist, r.served, sizes)
+        assert (np.diff(hits) >= 0).all()
+        # a cache big enough for every distinct block serves every
+        # served access
+        assert hits[-1] == int(np.asarray(r.served).sum())
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_first_access_never_served(tr):
+    r = urd_distances(tr.addr, tr.is_write)
+    first = {}
+    served = np.asarray(r.served)
+    for i, a in enumerate(np.asarray(tr.addr)):
+        if a not in first:
+            first[a] = i
+            assert not served[i]
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_write_appended_suffix_does_not_change_metrics(tr):
+    """Bucket-padding correctness: fresh trailing writes are inert."""
+    n = len(tr)
+    suffix = Trace(addr=np.arange(10_000, 10_003, dtype=np.int32),
+                   is_write=np.ones(3, bool))
+    tr2 = Trace.concat([tr, suffix])
+    for p in (Policy.RO, Policy.WBWO, Policy.WB):
+        r1 = pod_distances(tr.addr, tr.is_write, p)
+        r2 = pod_distances(tr2.addr, tr2.is_write, p)
+        assert (np.asarray(r1.dist) == np.asarray(r2.dist)[:n]).all()
+
+
+@given(traces(max_size=120))
+@settings(**SETTINGS)
+def test_trd_counts_all_reaccesses(tr):
+    r = trd_distances(tr.addr, tr.is_write)
+    served = np.asarray(r.served)
+    seen = set()
+    for i, a in enumerate(np.asarray(tr.addr)):
+        assert served[i] == (int(a) in seen)
+        seen.add(int(a))

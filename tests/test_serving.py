@@ -1,0 +1,125 @@
+"""Serving-path correctness: prefill/decode equivalence, SWA ring cache,
+and the ETICA two-tier KV manager's policy behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kvcache import GlobalLRUManager, TwoTierConfig, TwoTierKVManager
+from repro.models import model as M
+
+
+def _mk(arch, **over):
+    cfg = configs.get_reduced(arch)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    return cfg
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen3-4b", "mamba2-370m", "jamba-v0.1-52b", "seamless-m4t-large-v2",
+    "deepseek-moe-16b", "internvl2-26b"])
+def test_prefill_decode_matches_full_forward(arch):
+    over = {"moe_capacity_factor": 8.0} if "moe" in arch or "jamba" in arch \
+        else {}
+    cfg = _mk(arch, **over)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, P, EXTRA = 2, 32, 2
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (B, P + EXTRA), 0, cfg.vocab_size)
+    if cfg.is_encdec:
+        frames = jax.random.normal(key, (B, 16, cfg.d_model))
+        mk_batch = lambda s: {"frames": frames, "dec_tokens": toks[:, :s]}
+        offset = 0
+    elif cfg.frontend == "vision":
+        patches = jax.random.normal(key, (B, cfg.frontend_tokens, cfg.d_model))
+        mk_batch = lambda s: {"tokens": toks[:, :s], "patches": patches}
+        offset = cfg.frontend_tokens
+    else:
+        mk_batch = lambda s: {"tokens": toks[:, :s]}
+        offset = 0
+    cache_len = P + EXTRA + offset
+    _, cache = M.prefill(params, cfg, mk_batch(P), cache_len=cache_len)
+    for i in range(EXTRA):
+        pos = P + i + offset
+        logits_d, cache = M.decode_step(params, cfg, toks[:, P+i:P+i+1],
+                                        cache, pos)
+        logits_p, _ = M.prefill(params, cfg, mk_batch(P + i + 1),
+                                cache_len=cache_len)
+        scale = float(jnp.max(jnp.abs(logits_p[:, -1]))) + 1e-6
+        err = float(jnp.max(jnp.abs(logits_d[:, -1] - logits_p[:, -1])))
+        assert err / scale < 2e-2, (arch, i, err / scale)
+
+
+def test_swa_ring_cache_matches_full_cache():
+    """mixtral-style sliding window: decoding with a ring cache of size
+    `window` must match decoding with the full-length cache."""
+    cfg = _mk("mixtral-8x22b", moe_capacity_factor=8.0, sliding_window=32)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    B, P, EXTRA = 1, 48, 4
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, P + EXTRA), 0,
+                              cfg.vocab_size)
+    mk_batch = lambda s: {"tokens": toks[:, :s]}
+    # full cache
+    _, cache_full = M.prefill(params, cfg, mk_batch(P), cache_len=P + EXTRA)
+    # ring cache at window size
+    _, cache_ring = M.prefill(params, cfg, mk_batch(P),
+                              cache_len=cfg.sliding_window)
+    for i in range(EXTRA):
+        pos = P + i
+        lf, cache_full = M.decode_step(params, cfg, toks[:, pos:pos+1],
+                                       cache_full, pos)
+        lr, cache_ring = M.decode_step(params, cfg, toks[:, pos:pos+1],
+                                       cache_ring, pos)
+        scale = float(jnp.max(jnp.abs(lf))) + 1e-6
+        assert float(jnp.max(jnp.abs(lf - lr))) / scale < 2e-2, i
+
+
+class TestTwoTierManager:
+    CFG = TwoTierConfig(page_size=8, hbm_pages=24, num_kv_heads=2,
+                        head_dim=8, num_layers=1, dtype="float32",
+                        maintenance_interval=16, resize_interval=64)
+
+    def _drive(self, mgr, steps=300, seed=0):
+        rng = np.random.default_rng(seed)
+        for sid in range(12):
+            mgr.new_session(sid, 0 if sid < 3 else 1)
+        for _ in range(steps):
+            sid = int(rng.integers(0, 3)) if rng.random() < 0.7 \
+                else int(rng.integers(3, 12))
+            mgr.activate(sid)
+            if rng.random() < 0.3 and len(mgr.sessions[sid].pages) < 4:
+                pg = rng.normal(size=(1, 8, 2, 8)).astype(np.float32)
+                mgr.append_page(sid, pg, pg)
+        return mgr.stats
+
+    def test_wbwo_write_bound(self):
+        """Tier-2 writes == pages generated (each committed exactly once)
+        — the WBWO endurance bound."""
+        mgr = TwoTierKVManager(self.CFG, 2)
+        st = self._drive(mgr)
+        assert st.dma_write_bytes == len(mgr.host) * self.CFG.page_bytes
+
+    def test_beats_lru_writeback_on_dma_writes(self):
+        a = self._drive(TwoTierKVManager(self.CFG, 2)).as_dict()
+        b = self._drive(GlobalLRUManager(self.CFG, 2)).as_dict()
+        assert a["dma_write_bytes"] < b["dma_write_bytes"]
+
+    def test_page_table_points_at_resident_pages(self):
+        mgr = TwoTierKVManager(self.CFG, 2)
+        self._drive(mgr, steps=100)
+        sid = 0
+        pt = mgr.activate(sid)
+        sess = mgr.sessions[sid]
+        for lp, slot in enumerate(pt):
+            assert mgr.slot_owner[int(slot)] == (sid, lp)
+
+    def test_repartition_tracks_hot_tenant(self):
+        mgr = TwoTierKVManager(self.CFG, 2)
+        self._drive(mgr, steps=400)
+        # tenant 0 gets 70% of activations across 3 sessions: its quota
+        # should be at least its fair share
+        assert mgr.tenant_quota[0] >= self.CFG.hbm_pages // 4

@@ -1,0 +1,125 @@
+"""Exact-simulator invariants (single- and two-level datapaths)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Policy, Stats, Trace, make_cache,
+                        simulate_single_level, simulate_two_level)
+from repro.core.simulator import resident_blocks, resize
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def run_single(tr, policy, sets=4, ways=4, active=4):
+    st_ = make_cache(sets, ways)
+    st_, stats, _ = simulate_single_level(
+        np.asarray(tr.addr), np.asarray(tr.is_write), st_, active, policy)
+    return st_, stats
+
+
+def traces(max_size=150, addr_space=20):
+    return st.lists(
+        st.tuples(st.integers(0, addr_space - 1), st.booleans()),
+        min_size=1, max_size=max_size,
+    ).map(lambda ops: Trace(
+        addr=np.array([a for a, _ in ops], np.int32),
+        is_write=np.array([w for _, w in ops], bool)))
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_conservation(tr):
+    """reads+writes == len; every read is a hit or a disk read."""
+    for p in (Policy.WB, Policy.RO, Policy.WBWO, Policy.WT):
+        _, s = run_single(tr, p)
+        assert int(s.reads) + int(s.writes) == len(tr)
+        assert int(s.reads) == int(s.read_hits_l2) + int(s.disk_reads)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_endurance_ordering(tr):
+    """WB commits at least as many cache writes as WBWO and RO —
+    the paper's Fig. 3 motivation."""
+    _, wb = run_single(tr, Policy.WB)
+    _, wbwo = run_single(tr, Policy.WBWO)
+    _, ro = run_single(tr, Policy.RO)
+    assert int(wbwo.cache_writes_l2) <= int(wb.cache_writes_l2)
+    assert int(ro.cache_writes_l2) <= int(wb.cache_writes_l2)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_wt_no_dirty_and_syncs_to_disk(tr):
+    st_, s = run_single(tr, Policy.WT)
+    assert not bool(np.asarray(st_.dirty).any())   # reliability: no dirty
+    assert int(s.disk_writes) >= int(s.writes)     # every write committed
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_ro_never_caches_writes(tr):
+    st_, s = run_single(tr, Policy.RO)
+    assert int(s.disk_writes) == int(s.writes)
+    assert not bool(np.asarray(st_.dirty).any())
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_two_level_dram_never_dirty(tr):
+    """ETICA reliability claim: the volatile level never holds dirty."""
+    dram, ssd = make_cache(4, 4), make_cache(4, 4)
+    for mode in ("full", "npe"):
+        d2, _, _, _ = simulate_two_level(
+            np.asarray(tr.addr), np.asarray(tr.is_write), dram, ssd,
+            4, 4, mode=mode)
+        assert not bool(np.asarray(d2.dirty).any())
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_full_mode_ssd_writes_below_npe(tr):
+    """Pull-mode SSD (no datapath write-miss allocation) can only reduce
+    SSD writes relative to the datapath-allocating NPE mode."""
+    def run(mode):
+        dram, ssd = make_cache(4, 4), make_cache(4, 4)
+        _, _, s, _ = simulate_two_level(
+            np.asarray(tr.addr), np.asarray(tr.is_write), dram, ssd,
+            4, 4, mode=mode)
+        return s
+    assert int(run("full").cache_writes_l2) <= int(run("npe").cache_writes_l2)
+
+
+def test_zero_capacity_bypasses():
+    tr = Trace.from_ops([('R', 1), ('R', 1), ('W', 2), ('R', 2)])
+    _, s = run_single(tr, Policy.WB, active=0)
+    assert int(s.hits) == 0
+    assert int(s.disk_reads) == tr.n_reads
+    assert int(s.cache_writes_l2) == 0
+
+
+def test_padding_requests_are_noops():
+    tr = Trace.from_ops([('R', 1), ('R', 1)])
+    addr = np.concatenate([np.asarray(tr.addr), np.full(5, -1, np.int32)])
+    w = np.concatenate([np.asarray(tr.is_write), np.zeros(5, bool)])
+    st_ = make_cache(2, 2)
+    _, s, _ = simulate_single_level(addr, w, st_, 2, Policy.WB)
+    assert int(s.reads) == 2 and int(s.writes) == 0
+    assert int(s.read_hits_l2) == 1
+
+
+def test_resize_flushes_dirty():
+    tr = Trace.from_ops([('W', i) for i in range(8)])
+    st_, s = run_single(tr, Policy.WB, sets=2, ways=4, active=4)
+    st2, flushed = resize(st_, 4, 1)
+    assert flushed > 0
+    assert resident_blocks(st2, 1).size <= 2
+
+
+def test_lru_eviction_order():
+    # cache of 2 (1 set x 2 ways): A B A C -> evicts B (LRU), A survives
+    tr = Trace.from_ops([('R', 1), ('R', 2), ('R', 1), ('R', 3), ('R', 1)])
+    st_, s = run_single(tr, Policy.WB, sets=1, ways=2, active=2)
+    # hits: A(2nd)=hit, A(3rd)=hit; B evicted by C
+    assert int(s.read_hits_l2) == 2
+    assert set(resident_blocks(st_, 2).tolist()) == {1, 3}

@@ -1,0 +1,168 @@
+"""Substrate tests: optimizer, compression, checkpointing, data pipeline,
+fault-tolerance runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (AsyncCheckpointer, all_steps,
+                                    latest_step, restore, save)
+from repro.data.pipeline import TokenPipeline
+from repro.optim import (OptConfig, apply_updates, clip_by_global_norm,
+                         ef_compress_update, init_error_buf,
+                         init_opt_state, quantize_int8, dequantize_int8,
+                         schedule)
+from repro.runtime.fault import (StepFailure, StragglerMonitor, remesh,
+                                 run_with_recovery)
+from repro import configs
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                        total_steps=200)
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = init_opt_state(params, cfg)
+        for _ in range(150):
+            g = {"w": 2 * params["w"]}      # d/dw of w^2
+            params, opt, _ = apply_updates(params, g, opt, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+    def test_clip(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        from repro.optim import global_norm
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                        min_lr_ratio=0.1)
+        assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+        assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+    def test_bf16_moments(self):
+        cfg = OptConfig(moment_dtype="bfloat16")
+        opt = init_opt_state({"w": jnp.zeros((3,))}, cfg)
+        assert opt["m"]["w"].dtype == jnp.bfloat16
+
+
+class TestCompression:
+    def test_quant_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+        q, scale = quantize_int8(x)
+        deq = dequantize_int8(q, scale, x.shape)
+        # error bounded by half a quantization step per row
+        bound = np.asarray(scale).max() * 0.5 + 1e-7
+        assert float(jnp.max(jnp.abs(deq - x))) <= bound
+
+    def test_error_feedback_accumulates(self):
+        g = {"w": jnp.full((2, 8), 0.001)}
+        e = init_error_buf(g)
+        total = jnp.zeros((2, 8))
+        for _ in range(50):
+            deq, e = ef_compress_update(g, e)
+            total = total + deq["w"]
+        # EF keeps the long-run mean unbiased
+        assert float(jnp.mean(total)) == pytest.approx(0.05, rel=0.05)
+
+
+class TestCheckpoint:
+    def _state(self):
+        return {"p": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "opt": {"m": jnp.ones((4,)), "step": jnp.int32(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        d = str(tmp_path)
+        save(d, 3, self._state())
+        out, step, _ = restore(d, self._state())
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(out["p"]),
+                                      np.asarray(self._state()["p"]))
+
+    def test_retention_and_latest(self, tmp_path):
+        d = str(tmp_path)
+        for s in (1, 2, 3, 4, 5):
+            save(d, s, self._state(), keep=2)
+        assert sorted(all_steps(d)) == [4, 5]
+        assert latest_step(d) == 5
+
+    def test_tmp_dirs_never_restored(self, tmp_path):
+        d = str(tmp_path)
+        save(d, 1, self._state())
+        os.makedirs(os.path.join(d, "step_9.tmp"))  # simulated crash
+        assert latest_step(d) == 1
+
+    def test_async(self, tmp_path):
+        d = str(tmp_path)
+        ck = AsyncCheckpointer(d)
+        ck.save(11, self._state())
+        ck.wait()
+        assert latest_step(d) == 11
+
+
+class TestDataPipeline:
+    def test_deterministic_replay(self):
+        cfg = configs.get_reduced("qwen3-4b")
+        p = TokenPipeline(cfg, batch=4, seq_len=16, seed=3)
+        a = p.batch_at(10)
+        b = p.batch_at(10)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_process_shards_differ(self):
+        cfg = configs.get_reduced("qwen3-4b")
+        a = TokenPipeline(cfg, 4, 16, seed=3, process_index=0,
+                          process_count=2).batch_at(0)
+        b = TokenPipeline(cfg, 4, 16, seed=3, process_index=1,
+                          process_count=2).batch_at(0)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+        assert a["tokens"].shape[0] == 2  # local batch
+
+    def test_prefetch_thread(self):
+        cfg = configs.get_reduced("qwen3-4b")
+        p = TokenPipeline(cfg, 2, 8, seed=0).start(step=5)
+        s, batch = p.next()
+        assert s == 5 and batch["tokens"].shape == (2, 8)
+        p.stop()
+
+
+class TestFaultRuntime:
+    def test_straggler_flags_outlier(self):
+        m = StragglerMonitor(warmup=3)
+        for i in range(10):
+            m.observe(i, 0.1)
+        assert not m.flagged
+        assert m.observe(10, 1.0)
+        assert m.flagged[0][0] == 10
+
+    def test_recovery_retries_and_restores(self):
+        calls = {"n": 0}
+
+        def step(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("boom")
+            return state + batch
+
+        out = run_with_recovery(step, 10, 5, restore_fn=lambda: 100)
+        assert out == 105 and calls["n"] == 2
+
+    def test_recovery_gives_up(self):
+        def step(state, batch):
+            raise RuntimeError("always")
+        with pytest.raises(StepFailure):
+            run_with_recovery(step, 0, 0, max_retries=2,
+                              restore_fn=lambda: 0)
+
+    def test_remesh_roundtrip(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        state = {"w": np.arange(8, dtype=np.float32)}
+        sh = {"w": NamedSharding(mesh, P())}
+        out = remesh(state, sh)
+        np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])

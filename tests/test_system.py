@@ -1,0 +1,154 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The small-scale equivalents of the paper's §5 experiments: ETICA vs
+ECI-Cache on a multi-VM trace (endurance + reliability + sizing), the
+training driver with failure injection, and the HLO analyzer used by the
+dry-run/roofline pipeline.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (EticaCache, EticaConfig, Geometry, Policy, Trace,
+                        interleave, make_centaur, make_eci_cache,
+                        make_scave, make_vcacheshare, pod, urd)
+from repro.traces import make, names
+
+
+GEO = Geometry(num_sets=16, max_ways=32)
+
+
+@pytest.fixture(scope="module")
+def mv_trace():
+    vms = ["hm_1", "usr_0", "web_3"]
+    traces = [make(n, 4000, seed=i, addr_offset=i * 10_000_000, scale=0.25)
+              for i, n in enumerate(vms)]
+    return interleave(traces, seed=42)
+
+
+@pytest.fixture(scope="module")
+def results(mv_trace):
+    cfg = EticaConfig(dram_capacity=400, ssd_capacity=800,
+                      geometry_dram=GEO, geometry_ssd=GEO,
+                      resize_interval=3000, promo_interval=1000)
+    etica = EticaCache(cfg, num_vms=3).run(mv_trace)
+    eci = make_eci_cache(1200, 3, geometry=GEO,
+                         resize_interval=3000).run(mv_trace)
+    return etica, eci
+
+
+def test_etica_improves_endurance(results):
+    """Paper §5.4: ETICA reduces SSD writes vs ECI-Cache (33.8% avg)."""
+    etica, eci = results
+    total_e = sum(r.ssd_writes for r in etica)
+    total_c = sum(r.ssd_writes for r in eci)
+    assert total_e < total_c
+    assert 1 - total_e / total_c > 0.2
+
+
+def test_etica_read_hits_served_fast(results):
+    etica, _ = results
+    for r in etica:
+        s = r.stats
+        assert s["read_hits_l1"] >= 0
+        assert s["reads"] + s["writes"] > 0
+        assert 0 <= r.hit_ratio <= 1
+
+
+def test_pod_sizing_below_urd(mv_trace):
+    """Paper §5.2: POD allocates less than URD for RO/WBWO policies."""
+    for v in range(3):
+        sub = mv_trace.for_vm(v)[:2000]
+        u = urd(sub)
+        assert pod(sub, Policy.RO) <= u
+        assert pod(sub, Policy.WBWO) <= u
+
+
+def test_all_baselines_run(mv_trace):
+    short = mv_trace[:3000]
+    for factory in (make_centaur, make_scave, make_vcacheshare):
+        res = factory(600, 3, geometry=GEO, resize_interval=1500).run(short)
+        assert len(res) == 3
+        for r in res:
+            assert 0 <= r.hit_ratio <= 1
+
+
+def test_trace_generators_match_spec():
+    from repro.traces import SPECS
+    for name in names():
+        tr = make(name, 1000, seed=0)
+        assert len(tr) == 1000
+        spec = SPECS[name]
+        read_frac = tr.n_reads / len(tr)
+        assert abs(read_frac - spec.read_ratio) < 0.1, name
+
+
+def test_train_driver_with_failure_injection(tmp_path):
+    from repro.launch.train import main
+    losses = main(["--arch", "phi4-mini-3.8b", "--steps", "8",
+                   "--batch", "2", "--seq", "32",
+                   "--ckpt-dir", str(tmp_path), "--ckpt-every", "3",
+                   "--inject-failure-at", "5", "--log-every", "100"])
+    assert len(losses) == 8
+    assert np.isfinite(losses).all()
+    from repro.checkpoint.store import latest_step
+    assert latest_step(str(tmp_path)) == 6
+
+
+def test_hlo_analyzer_ground_truth():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.dot(c, w, preferred_element_type=jnp.float32), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = analyze(jax.jit(f).lower(x, w).compile().as_text())
+    assert r["dot_flops"] == 2 * 128 * 256 * 256 * 7
+
+
+def test_dryrun_cell_subprocess():
+    """One real dry-run cell end-to-end in a subprocess (512 placeholder
+    devices, 16x16 mesh, lower+compile+analyze)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-370m", "--shape", "decode_32k", "--out",
+         "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, (r.stderr or "")[-2000:]
+    rec = json.loads(r.stdout)
+    assert rec["status"] == "ok"
+    assert rec["flops"] > 0 and rec["collective_bytes"] >= 0
+
+
+def test_fast_global_two_level_baseline():
+    """Table 1's FAST-style global two-level baseline runs and promotes
+    hot blocks into the SSD tier."""
+    from repro.core.baselines import make_fast
+    tr = make("hm_1", 3000, seed=3, scale=0.25)
+    r = make_fast(200, 400).run(tr)
+    assert 0 < r.hit_ratio <= 1
+    assert r.ssd_writes > 0  # hot promotions happened
+
+
+def test_l2arc_global_two_level_baseline():
+    """L2ARC-style baseline: DRAM evictions spill to the SSD FIFO; a
+    re-read of a spilled block hits the SSD tier."""
+    from repro.core.baselines import make_l2arc
+    tr = make("hm_1", 3000, seed=5, scale=0.25)
+    r = make_l2arc(100, 400).run(tr)
+    assert 0 < r.hit_ratio <= 1
+    assert r.stats.get("read_hits_l2", 0) > 0  # SSD served spilled reads
