@@ -1,6 +1,14 @@
 """Paper Figs. 15 & 16: cache reallocation and hit ratio as VMs come
-online (1 -> 2 -> 4 -> 8 VMs against a fixed total cache)."""
+online (1 -> 2 -> 4 -> 8 VMs against a fixed total cache), plus the
+batched-datapath head-to-head: one vmapped dispatch for all VMs
+(``batched=True``, the default) vs the sequential per-VM dispatch loop
+(``batched=False``, the reference oracle). The head-to-head asserts both
+paths produce *exactly* the same aggregate Stats before reporting the
+wall-clock speedup.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -9,10 +17,82 @@ from repro.traces import make
 
 from .common import Timer, etica_config, row
 
-PHASES = [1, 2, 4, 8]
+PHASES = [1, 2, 4, 8, 16]
 REQS_PER_PHASE = 4_000
 WORKLOADS = ["hm_1", "proj_0", "stg_1", "usr_0", "ts_0", "wdev_0",
-             "web_3", "src2_0"]
+             "web_3", "src2_0"] * 2  # 16 consolidated VMs (ECI-Cache scale)
+
+
+def _phase_trace(vm_traces, phase: int, active: int) -> Trace:
+    """Interleave the active VMs' segments for one phase."""
+    chunks, vm_ids = [], []
+    for v in range(active):
+        seg = vm_traces[v][phase * REQS_PER_PHASE:
+                           (phase + 1) * REQS_PER_PHASE]
+        chunks.append(np.asarray(seg.addr))
+        vm_ids.append(np.full(len(seg), v, np.int32))
+    rng = np.random.default_rng(phase)
+    order = rng.permutation(sum(len(c) for c in chunks))
+    addr = np.concatenate(chunks)[order]
+    wr = np.concatenate(
+        [np.asarray(vm_traces[v][phase * REQS_PER_PHASE:
+                                 (phase + 1) * REQS_PER_PHASE]
+                    .is_write) for v in range(active)])[order]
+    vm = np.concatenate(vm_ids)[order]
+    return Trace(addr=addr, is_write=wr, vm=vm)
+
+
+def _aggregate(results) -> dict[str, float]:
+    agg: dict[str, float] = {}
+    for r in results:
+        for k, v in r.stats.items():
+            agg[k] = agg.get(k, 0.0) + v
+    return agg
+
+
+def scaling_ramp(vm_traces) -> None:
+    """The paper's figure: VMs coming online against a fixed cache."""
+    num_vms = max(PHASES)
+    cache = EticaCache(etica_config("full", dram=200, ssd=400), num_vms)
+    with Timer() as t:
+        for phase, active in enumerate(PHASES):
+            res = cache.run(_phase_trace(vm_traces, phase, active))
+            hits = np.mean([r.hit_ratio for r in res[:active]])
+            allocs = [int(l.alloc.sum()) for l in cache.logs_ssd[-2:]]
+            row(f"fig15/phase_{active}vms", 0.0,
+                f"avg_hit={hits:.3f} ssd_alloc_total={allocs[-1]}")
+    row("fig15/total", t.us / (REQS_PER_PHASE * sum(PHASES)), "done")
+
+
+def batched_vs_sequential(vm_traces, active: int) -> None:
+    """Head-to-head at ``active`` VMs: identical results, fewer dispatches."""
+    trace = _phase_trace(vm_traces, 0, active)
+
+    def build(batched: bool) -> EticaCache:
+        cfg = dataclasses.replace(etica_config("full", dram=200, ssd=400),
+                                  batched=batched)
+        return EticaCache(cfg, active)
+
+    # warm-up pass per path compiles every executable (shapes repeat)
+    for batched in (True, False):
+        build(batched).run(trace)
+
+    runs = {}
+    for batched in (True, False):
+        cache = build(batched)
+        with Timer() as t:
+            res = cache.run(trace)
+        runs[batched] = (_aggregate(res), t.dt)
+    agg_b, time_b = runs[True]
+    agg_s, time_s = runs[False]
+    assert agg_b == agg_s, (
+        f"batched and sequential paths diverged at {active} VMs:\n"
+        f"  batched:    {agg_b}\n  sequential: {agg_s}")
+    speedup = time_s / time_b
+    row(f"fig15/batched_speedup_{active}vms",
+        time_b * 1e6 / (active * REQS_PER_PHASE),
+        f"speedup={speedup:.2f}x sequential_s={time_s:.2f} "
+        f"batched_s={time_b:.2f} stats_equal=True")
 
 
 def main():
@@ -20,30 +100,8 @@ def main():
     vm_traces = [make(w, REQS_PER_PHASE * len(PHASES), seed=i,
                       addr_offset=i * 10_000_000, scale=0.25)
                  for i, w in enumerate(WORKLOADS)]
-    cache = EticaCache(etica_config("full", dram=200, ssd=400), num_vms)
-    with Timer() as t:
-        for phase, active in enumerate(PHASES):
-            # interleave only the active VMs for this phase
-            chunks, vm_ids = [], []
-            for v in range(active):
-                seg = vm_traces[v][phase * REQS_PER_PHASE:
-                                   (phase + 1) * REQS_PER_PHASE]
-                chunks.append(np.asarray(seg.addr))
-                vm_ids.append(np.full(len(seg), v, np.int32))
-            rng = np.random.default_rng(phase)
-            order = rng.permutation(sum(len(c) for c in chunks))
-            addr = np.concatenate(chunks)[order]
-            wr = np.concatenate(
-                [np.asarray(vm_traces[v][phase * REQS_PER_PHASE:
-                                         (phase + 1) * REQS_PER_PHASE]
-                            .is_write) for v in range(active)])[order]
-            vm = np.concatenate(vm_ids)[order]
-            res = cache.run(Trace(addr=addr, is_write=wr, vm=vm))
-            hits = np.mean([r.hit_ratio for r in res[:active]])
-            allocs = [int(l.alloc.sum()) for l in cache.logs_ssd[-2:]]
-            row(f"fig15/phase_{active}vms", 0.0,
-                f"avg_hit={hits:.3f} ssd_alloc_total={allocs[-1]}")
-    row("fig15/total", t.us / (REQS_PER_PHASE * sum(PHASES)), "done")
+    scaling_ramp(vm_traces)
+    batched_vs_sequential(vm_traces, max(PHASES))
 
 
 if __name__ == "__main__":

@@ -38,9 +38,13 @@ def main():
         wbwo_t += demand_blocks(pod(head, Policy.WBWO))
     size_red = 1 - (ro_t + wbwo_t) / (2 * urd_t)
 
+    # batched=True (default): each promo window simulates ALL VMs in one
+    # vmapped dispatch; batched=False keeps the per-VM dispatch loop and
+    # produces bit-identical results (see benchmarks/fig15_vm_scaling.py)
     cfg = EticaConfig(dram_capacity=400, ssd_capacity=800,
                       geometry_dram=geo, geometry_ssd=geo,
-                      resize_interval=2000, promo_interval=500)
+                      resize_interval=2000, promo_interval=500,
+                      batched=True)
     etica = EticaCache(cfg, len(names)).run(trace)
     eci = make_eci_cache(1200, len(names), geometry=geo,
                          resize_interval=2000).run(trace)

@@ -27,6 +27,9 @@ trace = interleave(
      for i, n in enumerate(vms)], seed=0)
 
 geo = Geometry(num_sets=16, max_ways=32)
+# The controller batches the datapath across VMs by default: per promo
+# window, one vmapped lax.scan simulates all VMs' partitions at once
+# (EticaConfig(batched=False) gives the bit-identical per-VM loop).
 etica = EticaCache(
     EticaConfig(dram_capacity=400, ssd_capacity=800, geometry_dram=geo,
                 geometry_ssd=geo, resize_interval=3000, promo_interval=500),

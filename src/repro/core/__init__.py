@@ -20,8 +20,12 @@ from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes, mrc, pod,
                     pod_distances, trd, trd_distances, urd, urd_distances)
 from .popularity import PopularityTracker, block_scores, contributions
 from .partition import PartitionResult, partition
-from .simulator import (CacheState, Stats, capacity_to_ways, make_cache,
-                        simulate_single_level, simulate_two_level)
+from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
+                        evict_blocks, make_cache, make_cache_batch,
+                        policy_flags, promote_blocks, resize, resize_batch,
+                        simulate_single_level, simulate_single_level_batch,
+                        simulate_two_level, simulate_two_level_batch,
+                        stack_states, unstack_states)
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
                          PartitionedSingleLevelCache, SingleLevelConfig,
                          VMResult)
@@ -35,8 +39,12 @@ __all__ = [
     "pod_distances", "trd", "trd_distances", "urd", "urd_distances",
     "PopularityTracker", "block_scores", "contributions",
     "PartitionResult", "partition",
-    "CacheState", "Stats", "capacity_to_ways", "make_cache",
-    "simulate_single_level", "simulate_two_level",
+    "CacheState", "PolicyFlags", "Stats", "capacity_to_ways",
+    "evict_blocks", "make_cache", "make_cache_batch", "policy_flags",
+    "promote_blocks", "resize", "resize_batch",
+    "simulate_single_level", "simulate_single_level_batch",
+    "simulate_two_level", "simulate_two_level_batch",
+    "stack_states", "unstack_states",
     "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
     "PartitionedSingleLevelCache", "SingleLevelConfig", "VMResult",
     "make_centaur", "make_eci_cache", "make_scave", "make_vcacheshare",

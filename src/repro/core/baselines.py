@@ -195,7 +195,7 @@ class FastCache:
             if hot.size:
                 self.ssd, n = promote_blocks(self.ssd, hot, self.ws, self.t)
                 self.stats["cache_writes_l2"] = (
-                    self.stats.get("cache_writes_l2", 0.0) + n)
+                    self.stats.get("cache_writes_l2", 0.0) + int(n))
         return VMResult(dict(self.stats), np.zeros(1, np.int64))
 
 
@@ -245,7 +245,7 @@ class L2ARCCache:
                 self.ssd, n = promote_blocks(self.ssd, evicted, self.ws,
                                              self.t)
                 self.stats["cache_writes_l2"] = (
-                    self.stats.get("cache_writes_l2", 0.0) + n)
+                    self.stats.get("cache_writes_l2", 0.0) + int(n))
         return VMResult(dict(self.stats), np.zeros(1, np.int64))
 
 

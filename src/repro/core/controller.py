@@ -12,21 +12,31 @@ differ only in the sizing metric and the per-VM write-policy chooser (see
 ``repro.core.baselines``).
 
 All datapath simulation happens in fixed-shape jitted ``lax.scan`` windows
-(padded with addr = -1 no-ops), so re-running 12 VMs x hundreds of
-intervals reuses one compiled executable per geometry.
+(padded with addr = -1 no-ops). With ``batched=True`` (the default) the
+per-VM cache states are stacked into one pytree with a leading ``[V]``
+axis and each window simulates **all VMs in one vmapped dispatch**; POD
+sizing and the promotion/eviction maintenance batch across VMs the same
+way (one dispatch per stage instead of V). Per-VM ways — and, for the
+one-level chassis, per-VM write policies — are traced operands, so
+heterogeneous allocations and ECI-style dynamic policies share one
+compiled executable. ``batched=False`` preserves the sequential per-VM
+architecture (separate per-VM states, V dispatches per window, host-side
+numpy maintenance) as the bit-identical reference oracle.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
 
+import jax
 import numpy as np
 
 from . import popularity as pop
 from .partition import partition as _partition
 from . import reuse, simulator
 from .policies import Policy
-from .simulator import CacheState, Stats, capacity_to_ways, make_cache
+from .simulator import (CacheState, Stats, capacity_to_ways, make_cache,
+                        make_cache_batch, policy_flags, resize_batch)
 from .trace import Trace
 
 
@@ -99,6 +109,26 @@ def _pad(addr: np.ndarray, is_write: np.ndarray, n: int):
             np.concatenate([is_write, np.zeros(k, bool)]))
 
 
+def _pad_batch(chunks: list[Trace | None], n: int):
+    """Stack per-VM windows into rectangular [V, n] arrays, padding ragged
+    tails (and VMs with no window) with addr = -1 no-ops."""
+    v = len(chunks)
+    addr = np.full((v, n), -1, np.int32)
+    is_write = np.zeros((v, n), bool)
+    for i, c in enumerate(chunks):
+        if c is None or len(c) == 0:
+            continue
+        k = min(len(c), n)
+        addr[i, :k] = np.asarray(c.addr, np.int32)[:k]
+        is_write[i, :k] = np.asarray(c.is_write)[:k]
+    return addr, is_write
+
+
+def _vm_slice(state: CacheState, v: int) -> CacheState:
+    """View VM ``v``'s cache out of a stacked [V, S, W] state."""
+    return jax.tree_util.tree_map(lambda x: x[v], state)
+
+
 def _stats_to_dict(st: Stats) -> dict[str, float]:
     return {k: float(v) for k, v in zip(Stats._fields, st)}
 
@@ -147,26 +177,45 @@ class EticaConfig:
     popularity_decay: float = 0.5
     mode: str = "full"               # "full" | "npe"
     mrc_points: int = 17
+    batched: bool = True             # one vmapped dispatch for all VMs
 
 
 class EticaCache:
     """The proposed system: DRAM(RO) + SSD(WBWO), POD sizing, PPC
-    partitioning, popularity-driven promotion/eviction."""
+    partitioning, popularity-driven promotion/eviction.
+
+    With ``cfg.batched`` the per-VM states live stacked in one
+    ``[V, S, W]`` pytree (``self.dram`` / ``self.ssd``); without it they
+    are lists of per-VM states. Use :meth:`vm_dram` / :meth:`vm_ssd` for a
+    single VM's view in either layout.
+    """
 
     def __init__(self, cfg: EticaConfig, num_vms: int):
         self.cfg = cfg
         self.num_vms = num_vms
         gd, gs = cfg.geometry_dram, cfg.geometry_ssd
-        self.dram = [make_cache(gd.num_sets, gd.max_ways) for _ in range(num_vms)]
-        self.ssd = [make_cache(gs.num_sets, gs.max_ways) for _ in range(num_vms)]
+        if cfg.batched:
+            self.dram = make_cache_batch(num_vms, gd.num_sets, gd.max_ways)
+            self.ssd = make_cache_batch(num_vms, gs.num_sets, gs.max_ways)
+        else:
+            self.dram = [make_cache(gd.num_sets, gd.max_ways)
+                         for _ in range(num_vms)]
+            self.ssd = [make_cache(gs.num_sets, gs.max_ways)
+                        for _ in range(num_vms)]
         self.ways_dram = np.zeros(num_vms, np.int32)
         self.ways_ssd = np.zeros(num_vms, np.int32)
-        self.t = np.zeros(num_vms, np.int64)
+        self.t = np.zeros(num_vms, np.int32)
         self.trackers = [pop.PopularityTracker(cfg.popularity_decay)
                          for _ in range(num_vms)]
         self.stats = [dict() for _ in range(num_vms)]
         self.logs_dram: list[IntervalLog] = []
         self.logs_ssd: list[IntervalLog] = []
+
+    def vm_dram(self, v: int) -> CacheState:
+        return _vm_slice(self.dram, v) if self.cfg.batched else self.dram[v]
+
+    def vm_ssd(self, v: int) -> CacheState:
+        return _vm_slice(self.ssd, v) if self.cfg.batched else self.ssd[v]
 
     # -- sizing -----------------------------------------------------------
     def _size_level(self, subs: list[Trace], policy: Policy, geom: Geometry,
@@ -174,13 +223,17 @@ class EticaCache:
         grid = _mrc_grid(geom, self.cfg.mrc_points)
         demands = np.zeros(self.num_vms, np.int64)
         curves = np.zeros((self.num_vms, grid.size))
-        dists = []
-        for v, sub in enumerate(subs):
-            if len(sub) == 0:
-                dists.append(None)
+        if self.cfg.batched:
+            # all VMs' POD decompositions in one vmapped dispatch
+            dists = reuse.pod_distances_batch(
+                [np.asarray(s.addr) for s in subs],
+                [np.asarray(s.is_write) for s in subs], policy)
+        else:
+            dists = [reuse.pod_distances(s.addr, s.is_write, policy)
+                     if len(s) else None for s in subs]
+        for v, (sub, r) in enumerate(zip(subs, dists)):
+            if r is None:
                 continue
-            r = reuse.pod_distances(sub.addr, sub.is_write, policy)
-            dists.append(r)
             demands[v] = min(reuse.demand_blocks(int(r.max)), geom.capacity)
             hits = reuse.hit_counts_at_sizes(r.dist, r.served, grid)
             curves[v] = np.asarray(hits, np.float64) / max(len(sub), 1)
@@ -190,19 +243,27 @@ class EticaCache:
         return alloc, demands, dists
 
     # -- maintenance --------------------------------------------------------
-    def _maintain(self, v: int, window: Trace) -> None:
-        """Popularity refresh + promotion/eviction queues (paper §4.2)."""
-        cfg = self.cfg
-        if len(window) == 0:
-            return
-        alloc_blocks = int(self.ways_ssd[v]) * cfg.geometry_ssd.num_sets
+    def _alloc_blocks(self, v: int) -> int:
+        return int(self.ways_ssd[v]) * self.cfg.geometry_ssd.num_sets
+
+    def _refresh_tracker(self, v: int, window: Trace, r) -> None:
         # Eq. 1 sums over ALL re-references (paper: "POD(i,t) is the POD of
         # B_i in the t-th access") — write re-references included, so
         # write-hot blocks (usr_0-style workloads) become popular and get
         # promoted into the WBWO SSD where subsequent writes hit.
-        r = reuse.trd_distances(window.addr, window.is_write)
-        contrib = pop.contributions(r.dist, r.served, max(alloc_blocks, 1))
+        contrib = pop.contributions(r.dist, r.served,
+                                    max(self._alloc_blocks(v), 1))
         self.trackers[v].update(np.asarray(window.addr), np.asarray(contrib))
+
+    def _maintain_seq(self, v: int, window: Trace) -> None:
+        """Per-VM popularity refresh + promotion/eviction (paper §4.2) —
+        the pre-batching host-side numpy path (reference oracle)."""
+        cfg = self.cfg
+        if len(window) == 0:
+            return
+        alloc_blocks = self._alloc_blocks(v)
+        r = reuse.trd_distances(window.addr, window.is_write)
+        self._refresh_tracker(v, window, r)
 
         ssd_res = simulator.resident_blocks(self.ssd[v], int(self.ways_ssd[v]))
         # eviction queue: least popular 5% of SSD-resident blocks — only
@@ -211,7 +272,8 @@ class EticaCache:
         if ssd_res.size and ssd_res.size >= 0.9 * alloc_blocks:
             evict = self.trackers[v].least_popular(ssd_res, cfg.evict_frac)
             if evict.size:
-                self.ssd[v], flushed = simulator.evict_blocks(self.ssd[v], evict)
+                self.ssd[v], flushed = simulator.evict_blocks_ref(
+                    self.ssd[v], evict)
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + flushed)
         # promotion queue: the most popular blocks known to the tracker
@@ -223,17 +285,118 @@ class EticaCache:
         if free:
             promote = self.trackers[v].top_known(residents, free)
             if promote.size:
-                self.ssd[v], n = simulator.promote_blocks(
-                    self.ssd[v], promote, int(self.ways_ssd[v]), int(self.t[v]))
+                self.ssd[v], n = simulator.promote_blocks_ref(
+                    self.ssd[v], promote, int(self.ways_ssd[v]),
+                    int(self.t[v]))
                 # each promotion = 1 disk read + 1 SSD write (endurance cost)
                 self.stats[v]["cache_writes_l2"] = (
                     self.stats[v].get("cache_writes_l2", 0.0) + n)
                 self.stats[v]["disk_reads"] = (
                     self.stats[v].get("disk_reads", 0.0) + n)
 
+    def _residents(self, tags_np: np.ndarray, v: int) -> np.ndarray:
+        t = tags_np[v, :, : max(int(self.ways_ssd[v]), 0)]
+        return t[t >= 0]
+
+    def _maintain_all(self, chunks: list[Trace | None]) -> None:
+        """All VMs' maintenance for one window: popularity refresh via one
+        batched TRD dispatch, then one vmapped eviction and one vmapped
+        promotion dispatch. Per-VM semantics identical to
+        :meth:`_maintain_seq`."""
+        cfg = self.cfg
+        live = [v for v, c in enumerate(chunks) if c is not None and len(c)]
+        if not live:
+            return
+        rs = reuse.trd_distances_batch(
+            [np.asarray(chunks[v].addr) for v in live],
+            [np.asarray(chunks[v].is_write) for v in live])
+        # Eq. 1 contributions for every VM in one elementwise dispatch
+        # (same values as the per-VM calls; padding rows contribute 0)
+        lens = [len(chunks[v]) for v in live]
+        width = simulator._next_pow2(max(lens))
+        dmat = np.full((len(live), width), -1, np.int32)
+        smat = np.zeros((len(live), width), bool)
+        cs = np.empty((len(live), 1), np.float32)
+        for i, v in enumerate(live):
+            dmat[i, : lens[i]] = rs[i].dist
+            smat[i, : lens[i]] = rs[i].served
+            cs[i] = max(self._alloc_blocks(v), 1)
+        cmat = np.asarray(pop.contributions(dmat, smat, cs))
+        for i, v in enumerate(live):
+            self.trackers[v].update(np.asarray(chunks[v].addr),
+                                    cmat[i, : lens[i]])
+
+        nothing = np.empty(0, np.int64)
+        tags_np = np.asarray(self.ssd.tags)
+        evict_qs = [nothing] * self.num_vms
+        for v in live:
+            res = self._residents(tags_np, v)
+            if res.size and res.size >= 0.9 * self._alloc_blocks(v):
+                evict_qs[v] = self.trackers[v].least_popular(
+                    res, cfg.evict_frac)
+        if any(q.size for q in evict_qs):
+            self.ssd, flushed = simulator.evict_blocks_batch(
+                self.ssd, evict_qs)
+            flushed = np.asarray(flushed)
+            for v in live:
+                if evict_qs[v].size:
+                    self.stats[v]["disk_writes"] = (
+                        self.stats[v].get("disk_writes", 0.0)
+                        + int(flushed[v]))
+            tags_np = np.asarray(self.ssd.tags)
+
+        promo_qs = [nothing] * self.num_vms
+        for v in live:
+            res = self._residents(tags_np, v)
+            free = max(self._alloc_blocks(v) - res.size, 0)
+            if free:
+                promo_qs[v] = self.trackers[v].top_known(res, free)
+        if any(q.size for q in promo_qs):
+            self.ssd, n = simulator.promote_blocks_batch(
+                self.ssd, promo_qs, self.ways_ssd, self.t)
+            n = np.asarray(n)
+            for v in live:
+                if promo_qs[v].size:
+                    self.stats[v]["cache_writes_l2"] = (
+                        self.stats[v].get("cache_writes_l2", 0.0)
+                        + int(n[v]))
+                    self.stats[v]["disk_reads"] = (
+                        self.stats[v].get("disk_reads", 0.0) + int(n[v]))
+
+    # -- datapath ----------------------------------------------------------
+    def _run_chunk_batched(self, chunks: list[Trace | None]) -> None:
+        """One vmapped dispatch simulates this window for every VM."""
+        cfg = self.cfg
+        a, w = _pad_batch(chunks, cfg.promo_interval)
+        self.dram, self.ssd, st, t_end = simulator.simulate_two_level_batch(
+            a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
+            mode=cfg.mode, t0=self.t)
+        self.t = np.asarray(t_end)
+        st = jax.device_get(st)
+        for v, chunk in enumerate(chunks):
+            if chunk is not None:
+                _acc(self.stats[v], Stats(*[f[v] for f in st]))
+
+    def _run_chunk_sequential(self, chunks: list[Trace | None]) -> None:
+        """Reference oracle: V sequential per-VM dispatches."""
+        cfg = self.cfg
+        for v, chunk in enumerate(chunks):
+            if chunk is None:
+                continue
+            a, w = _pad(np.asarray(chunk.addr, np.int32),
+                        np.asarray(chunk.is_write), cfg.promo_interval)
+            self.dram[v], self.ssd[v], st, t_end = \
+                simulator.simulate_two_level(
+                    a, w, self.dram[v], self.ssd[v],
+                    int(self.ways_dram[v]), int(self.ways_ssd[v]),
+                    mode=cfg.mode, t0=int(self.t[v]))
+            self.t[v] = int(t_end)
+            _acc(self.stats[v], st)
+
     # -- main loop ----------------------------------------------------------
     def run(self, trace: Trace) -> list[VMResult]:
         cfg = self.cfg
+        gd, gs = cfg.geometry_dram, cfg.geometry_ssd
         alloc_hist = [[] for _ in range(self.num_vms)]
         for window in trace.intervals(cfg.resize_interval):
             subs = [window.for_vm(v) if window.vm is not None else window
@@ -245,37 +408,45 @@ class EticaCache:
                 subs, Policy.WBWO, cfg.geometry_ssd, cfg.ssd_capacity)
             self.logs_dram.append(IntervalLog(dem_d, alloc_d))
             self.logs_ssd.append(IntervalLog(dem_s, alloc_s))
-            # 2) resize (flushing dirty blocks on shrink)
+            # 2) resize both levels (shrinking flushes dirty blocks)
+            wd = np.asarray(capacity_to_ways(alloc_d, gd.num_sets,
+                                             gd.max_ways))
+            ws = np.asarray(capacity_to_ways(alloc_s, gs.num_sets,
+                                             gs.max_ways))
+            if cfg.batched:
+                self.dram, _ = resize_batch(self.dram, self.ways_dram, wd)
+                self.ssd, flushed = resize_batch(self.ssd, self.ways_ssd, ws)
+                flushed = np.asarray(flushed)
+                for v in range(self.num_vms):
+                    self.stats[v]["disk_writes"] = (
+                        self.stats[v].get("disk_writes", 0.0)
+                        + int(flushed[v]))
+            else:
+                for v in range(self.num_vms):
+                    self.dram[v], _ = simulator.resize_ref(
+                        self.dram[v], int(self.ways_dram[v]), int(wd[v]))
+                    self.ssd[v], fl = simulator.resize_ref(
+                        self.ssd[v], int(self.ways_ssd[v]), int(ws[v]))
+                    self.stats[v]["disk_writes"] = (
+                        self.stats[v].get("disk_writes", 0.0) + fl)
             for v in range(self.num_vms):
-                wd = int(capacity_to_ways(int(alloc_d[v]),
-                                          cfg.geometry_dram.num_sets,
-                                          cfg.geometry_dram.max_ways))
-                ws = int(capacity_to_ways(int(alloc_s[v]),
-                                          cfg.geometry_ssd.num_sets,
-                                          cfg.geometry_ssd.max_ways))
-                self.dram[v], _ = simulator.resize(
-                    self.dram[v], int(self.ways_dram[v]), wd)
-                self.ssd[v], flushed = simulator.resize(
-                    self.ssd[v], int(self.ways_ssd[v]), ws)
-                self.stats[v]["disk_writes"] = (
-                    self.stats[v].get("disk_writes", 0.0) + flushed)
-                self.ways_dram[v], self.ways_ssd[v] = wd, ws
                 alloc_hist[v].append(int(alloc_d[v] + alloc_s[v]))
+            self.ways_dram, self.ways_ssd = wd, ws
             # 3) datapath simulation in promo-interval chunks + maintenance
-            for v in range(self.num_vms):
-                sub = subs[v]
-                for chunk in sub.intervals(cfg.promo_interval):
-                    a, w = _pad(np.asarray(chunk.addr, np.int32),
-                                np.asarray(chunk.is_write), cfg.promo_interval)
-                    self.dram[v], self.ssd[v], st, t_end = \
-                        simulator.simulate_two_level(
-                            a, w, self.dram[v], self.ssd[v],
-                            int(self.ways_dram[v]), int(self.ways_ssd[v]),
-                            mode=cfg.mode, t0=int(self.t[v]))
-                    self.t[v] = int(t_end)
-                    _acc(self.stats[v], st)
+            chunk_lists = [list(sub.intervals(cfg.promo_interval))
+                           for sub in subs]
+            for k in range(max(map(len, chunk_lists), default=0)):
+                kth = [c[k] if k < len(c) else None for c in chunk_lists]
+                if cfg.batched:
+                    self._run_chunk_batched(kth)
                     if cfg.mode == "full":
-                        self._maintain(v, chunk)
+                        self._maintain_all(kth)
+                else:
+                    self._run_chunk_sequential(kth)
+                    if cfg.mode == "full":
+                        for v, chunk in enumerate(kth):
+                            if chunk is not None:
+                                self._maintain_seq(v, chunk)
         return [VMResult(dict(self.stats[v]),
                          np.asarray(alloc_hist[v], np.int64))
                 for v in range(self.num_vms)]
@@ -292,6 +463,7 @@ class SingleLevelConfig:
     resize_interval: int = 10_000
     sim_chunk: int = 1_000
     mrc_points: int = 17
+    batched: bool = True             # one vmapped dispatch for all VMs
 
 
 MetricFn = Callable[[Trace], tuple[int, np.ndarray, np.ndarray]]
@@ -305,7 +477,10 @@ class PartitionedSingleLevelCache:
     ECI-Cache = URD metric + dynamic WB/RO policy; Centaur = TRD + WB;
     S-CAVE = WSS + WT; vCacheShare = reuse-intensity + RO. Push-mode
     datapath (allocates on every miss the policy admits) — exactly the
-    behavior the paper criticizes in §2.1.
+    behavior the paper criticizes in §2.1. With ``cfg.batched`` the
+    per-VM states are stacked (``[V, S, W]``) and each window runs all
+    VMs — including heterogeneous per-VM policies — in one vmapped
+    dispatch; otherwise states are per-VM lists driven sequentially.
     """
 
     def __init__(self, cfg: SingleLevelConfig, num_vms: int,
@@ -315,11 +490,18 @@ class PartitionedSingleLevelCache:
         self.metric = metric
         self.policy_fn = policy_fn
         g = cfg.geometry
-        self.caches = [make_cache(g.num_sets, g.max_ways) for _ in range(num_vms)]
+        if cfg.batched:
+            self.caches = make_cache_batch(num_vms, g.num_sets, g.max_ways)
+        else:
+            self.caches = [make_cache(g.num_sets, g.max_ways)
+                           for _ in range(num_vms)]
         self.ways = np.zeros(num_vms, np.int32)
-        self.t = np.zeros(num_vms, np.int64)
+        self.t = np.zeros(num_vms, np.int32)
         self.stats = [dict() for _ in range(num_vms)]
         self.logs: list[IntervalLog] = []
+
+    def vm_cache(self, v: int) -> CacheState:
+        return _vm_slice(self.caches, v) if self.cfg.batched else self.caches[v]
 
     def run(self, trace: Trace) -> list[VMResult]:
         cfg = self.cfg
@@ -344,25 +526,52 @@ class PartitionedSingleLevelCache:
                                         cfg.geometry)
             self.logs.append(IntervalLog(demands, alloc,
                                          [p.value for p in policies]))
+            w_new = np.asarray(capacity_to_ways(
+                alloc, cfg.geometry.num_sets, cfg.geometry.max_ways))
+            if cfg.batched:
+                self.caches, flushed = resize_batch(self.caches, self.ways,
+                                                    w_new)
+                flushed = np.asarray(flushed)
+                for v in range(self.num_vms):
+                    self.stats[v]["disk_writes"] = (
+                        self.stats[v].get("disk_writes", 0.0)
+                        + int(flushed[v]))
+            else:
+                for v in range(self.num_vms):
+                    self.caches[v], fl = simulator.resize_ref(
+                        self.caches[v], int(self.ways[v]), int(w_new[v]))
+                    self.stats[v]["disk_writes"] = (
+                        self.stats[v].get("disk_writes", 0.0) + fl)
             for v in range(self.num_vms):
-                w = int(capacity_to_ways(int(alloc[v]),
-                                         cfg.geometry.num_sets,
-                                         cfg.geometry.max_ways))
-                self.caches[v], flushed = simulator.resize(
-                    self.caches[v], int(self.ways[v]), w)
-                self.stats[v]["disk_writes"] = (
-                    self.stats[v].get("disk_writes", 0.0) + flushed)
-                self.ways[v] = w
                 alloc_hist[v].append(int(alloc[v]))
-                sub = subs[v]
-                for chunk in sub.intervals(cfg.sim_chunk):
-                    a, wr = _pad(np.asarray(chunk.addr, np.int32),
-                                 np.asarray(chunk.is_write), cfg.sim_chunk)
-                    self.caches[v], st, t_end = simulator.simulate_single_level(
-                        a, wr, self.caches[v], int(self.ways[v]),
-                        policies[v], t0=int(self.t[v]))
-                    self.t[v] = int(t_end)
-                    _acc(self.stats[v], st)
+            self.ways = w_new
+            chunk_lists = [list(sub.intervals(cfg.sim_chunk)) for sub in subs]
+            flags = policy_flags(policies)
+            for k in range(max(map(len, chunk_lists), default=0)):
+                kth = [c[k] if k < len(c) else None for c in chunk_lists]
+                if cfg.batched:
+                    a, wr = _pad_batch(kth, cfg.sim_chunk)
+                    self.caches, st, t_end = \
+                        simulator.simulate_single_level_batch(
+                            a, wr, self.caches, self.ways, flags, t0=self.t)
+                    self.t = np.asarray(t_end)
+                    st = jax.device_get(st)
+                    for v, chunk in enumerate(kth):
+                        if chunk is not None:
+                            _acc(self.stats[v], Stats(*[f[v] for f in st]))
+                else:
+                    for v, chunk in enumerate(kth):
+                        if chunk is None:
+                            continue
+                        a, wr = _pad(np.asarray(chunk.addr, np.int32),
+                                     np.asarray(chunk.is_write),
+                                     cfg.sim_chunk)
+                        self.caches[v], st, t_end = \
+                            simulator.simulate_single_level(
+                                a, wr, self.caches[v], int(self.ways[v]),
+                                policies[v], t0=int(self.t[v]))
+                        self.t[v] = int(t_end)
+                        _acc(self.stats[v], st)
         return [VMResult(dict(self.stats[v]),
                          np.asarray(alloc_hist[v], np.int64))
                 for v in range(self.num_vms)]

@@ -19,8 +19,12 @@ import numpy as np
 
 @jax.jit
 def contributions(dist: jax.Array, served: jax.Array, cache_size) -> jax.Array:
-    """Eq. 1 per-access popularity contribution."""
-    cs = jnp.maximum(jnp.float32(cache_size), 1.0)
+    """Eq. 1 per-access popularity contribution.
+
+    ``cache_size`` may be a scalar or any shape broadcastable against
+    ``dist`` (e.g. ``[V, 1]`` per-VM sizes against ``[V, N]`` windows).
+    """
+    cs = jnp.maximum(jnp.asarray(cache_size, jnp.float32), 1.0)
     d = dist.astype(jnp.float32)
     return jnp.where(served & (dist >= 0), jnp.exp(-d / cs), 0.0)
 
@@ -37,30 +41,54 @@ def block_scores(addr: np.ndarray, contrib: np.ndarray):
 class PopularityTracker:
     """Running per-block popularity with exponential aging across windows.
 
-    8 bytes/page in the paper; here a host dict keyed by block address —
-    the same asymptotic overhead, kept off the datapath.
+    8 bytes/page in the paper; here a sorted (address, score) numpy table
+    — the same asymptotic overhead, kept off the datapath, with every
+    operation (aging, merge, lookup, top/bottom-k) vectorized instead of
+    per-key dict loops.
     """
 
     def __init__(self, decay: float = 0.5):
         self.decay = float(decay)
-        self._scores: dict[int, float] = {}
+        self._addr = np.empty(0, np.int64)   # sorted block addresses
+        self._val = np.empty(0, np.float64)  # scores, aligned with _addr
+
+    def __len__(self) -> int:
+        return int(self._addr.size)
 
     def update(self, addr: np.ndarray, contrib: np.ndarray) -> None:
-        for k in list(self._scores):
-            self._scores[k] *= self.decay
+        self._val *= self.decay
         uniq, scores = block_scores(addr, contrib)
-        for a, s in zip(uniq.tolist(), scores.tolist()):
-            self._scores[a] = self._scores.get(a, 0.0) + s
+        uniq = uniq.astype(np.int64)
+        found = np.zeros(uniq.size, bool)
+        if self._addr.size and uniq.size:
+            pos = np.searchsorted(self._addr, uniq)
+            in_range = pos < self._addr.size
+            found[in_range] = self._addr[pos[in_range]] == uniq[in_range]
+            self._val[pos[found]] += scores[found]
+        if (~found).any():
+            merged_a = np.concatenate([self._addr, uniq[~found]])
+            merged_v = np.concatenate([self._val, scores[~found]])
+            order = np.argsort(merged_a, kind="stable")
+            self._addr, self._val = merged_a[order], merged_v[order]
         # drop negligible entries to bound memory (paper: 0.15% overhead)
-        if len(self._scores) > 1_000_000:
-            thr = np.percentile(list(self._scores.values()), 10)
-            self._scores = {k: v for k, v in self._scores.items() if v > thr}
+        if self._addr.size > 1_000_000:
+            thr = np.percentile(self._val, 10)
+            keep = self._val > thr
+            self._addr, self._val = self._addr[keep], self._val[keep]
 
     def score(self, addr: int) -> float:
-        return self._scores.get(int(addr), 0.0)
+        return float(self.scores_for(np.asarray([addr]))[0])
 
     def scores_for(self, addrs: np.ndarray) -> np.ndarray:
-        return np.array([self._scores.get(int(a), 0.0) for a in np.asarray(addrs)])
+        addrs = np.asarray(addrs, np.int64)
+        out = np.zeros(addrs.shape, np.float64)
+        if self._addr.size and addrs.size:
+            pos = np.searchsorted(self._addr, addrs)
+            in_range = pos < self._addr.size
+            hit = in_range.copy()
+            hit[in_range] = self._addr[pos[in_range]] == addrs[in_range]
+            out[hit] = self._val[pos[hit]]
+        return out
 
     def most_popular(self, candidates: np.ndarray, frac: float,
                      limit: int | None = None) -> np.ndarray:
@@ -84,13 +112,16 @@ class PopularityTracker:
         ``exclude`` — the paper's promotion queue draws from the full
         popularity table of disk-resident blocks, not only the current
         window's accesses."""
-        if limit <= 0 or not self._scores:
+        if limit <= 0 or not self._addr.size:
             return np.empty(0, np.int64)
-        excl = set(int(a) for a in np.asarray(exclude))
-        items = [(s, a) for a, s in self._scores.items()
-                 if s > 0 and a not in excl]
-        items.sort(reverse=True)
-        return np.array([a for _, a in items[:limit]], np.int64)
+        cand = self._val > 0
+        exclude = np.asarray(exclude)
+        if exclude.size:
+            cand &= ~np.isin(self._addr, exclude)
+        addrs, vals = self._addr[cand], self._val[cand]
+        # score desc, address desc on ties (the historical ordering)
+        order = np.lexsort((-addrs, -vals))
+        return addrs[order[:limit]]
 
     def least_popular(self, candidates: np.ndarray, frac: float) -> np.ndarray:
         """Bottom-``frac`` of ``candidates`` (eviction queue)."""

@@ -223,6 +223,62 @@ def pod_distances(addr, is_write, policy: Policy, chunk: int = 256) -> DistResul
     return _slice(_decompose_jit(a, w, policy, chunk=chunk), n)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "sizing_reads_only", "chunk"))
+def _decompose_vmapped(amat, wmat, policy, sizing_reads_only, chunk):
+    return jax.vmap(
+        lambda a, w: _decompose(a, w, policy,
+                                sizing_reads_only=sizing_reads_only,
+                                chunk=chunk))(amat, wmat)
+
+
+def _distances_batch(addrs, writes, policy: Policy, sizing_reads_only: bool,
+                     chunk: int) -> list[DistResult | None]:
+    """Decompose many traces in ONE vmapped dispatch.
+
+    ``addrs``/``writes`` are ragged per-VM request lists; rows are padded
+    to a common power-of-two bucket with the same never-reused trailing
+    writes as :func:`_pad_trace` (exact, see above), so per-VM results are
+    bit-identical to calling the unbatched functions per VM. Empty rows
+    come back as ``None``.
+    """
+    lens = [int(np.shape(a)[0]) for a in addrs]
+    live = [v for v, n in enumerate(lens) if n > 0]
+    if not live:
+        return [None] * len(lens)
+    b = _bucket(max(lens[v] for v in live))
+    amat = np.empty((len(live), b), np.int32)
+    wmat = np.empty((len(live), b), bool)
+    for i, v in enumerate(live):
+        pad_addr = _PAD_BASE + np.arange(b - lens[v], dtype=np.int32)
+        amat[i] = np.concatenate([np.asarray(addrs[v], np.int32), pad_addr])
+        wmat[i] = np.concatenate(
+            [np.asarray(writes[v], bool), np.ones(b - lens[v], bool)])
+    r = _decompose_vmapped(amat, wmat, policy=policy,
+                           sizing_reads_only=sizing_reads_only, chunk=chunk)
+    out: list[DistResult | None] = [None] * len(lens)
+    dist, served, touch = (np.asarray(r.dist), np.asarray(r.served),
+                           np.asarray(r.touch))
+    for i, v in enumerate(live):
+        out[v] = DistResult(dist=dist[i, : lens[v]],
+                            served=served[i, : lens[v]],
+                            touch=touch[i, : lens[v]])
+    return out
+
+
+def pod_distances_batch(addrs, writes, policy: Policy,
+                        chunk: int = 256) -> list[DistResult | None]:
+    """Per-VM :func:`pod_distances` in one vmapped dispatch (ragged input,
+    bit-identical per-VM results; empty traces -> ``None``)."""
+    return _distances_batch(addrs, writes, policy, True, chunk)
+
+
+def trd_distances_batch(addrs, writes,
+                        chunk: int = 256) -> list[DistResult | None]:
+    """Per-VM :func:`trd_distances` in one vmapped dispatch."""
+    return _distances_batch(addrs, writes, Policy.WB, False, chunk)
+
+
 def urd_distances(addr, is_write, chunk: int = 256) -> DistResult:
     """URD (ECI-Cache): read re-references over WB content semantics."""
     a, w, n = _pad_trace(addr, is_write)

@@ -17,11 +17,44 @@ resizing between intervals activates/deactivates ways (deactivation
 flushes dirty blocks, counted as disk writes). All datapath state is a
 pytree scanned over the request stream, so a full interval simulates as
 one fused XLA loop.
+
+Batched multi-VM contract
+-------------------------
+
+ETICA partitions one physical cache across V VMs; the batched entry
+points run one interval for *all* VMs as a single jitted dispatch instead
+of V sequential ones:
+
+  * :func:`simulate_single_level_batch` — ``addr``/``is_write`` are
+    ``[V, N]``, the :class:`CacheState` pytree carries a leading VM axis
+    (``tags``/``lru``/``dirty`` are ``[V, S, W]``), ``ways_active`` and
+    ``t0`` are ``[V]``, and the write policy is a :class:`PolicyFlags` of
+    ``[V]`` booleans (build with :func:`policy_flags`) — so heterogeneous
+    per-VM policies (ECI-Cache's dynamic RO/WB) and per-VM allocations
+    batch in one executable.
+  * :func:`simulate_two_level_batch` — same layout for both levels;
+    ``mode`` stays static (it is global to the hierarchy).
+
+Both return the same (state(s), :class:`Stats`, ``t_end``) tuple with a
+leading ``[V]`` axis on every leaf, **bit-identical** per VM to running
+the unbatched functions per VM (the batched path vmaps the very same
+step function; integer counters and float32 latency accumulate in the
+same order). Padding requests with ``addr == -1`` makes them exact
+no-ops, which is how ragged per-VM windows batch to a rectangle. Use
+:func:`make_cache_batch` / :func:`stack_states` / :func:`unstack_states`
+to build and take apart the stacked pytrees.
+
+The between-interval maintenance helpers (:func:`resize`,
+:func:`evict_blocks`, :func:`promote_blocks`) are vectorized ``jnp`` ops
+with ``(state, count)`` contracts, jit-able and vmappable
+(:func:`resize_batch` maps :func:`resize` over the VM axis); the original
+numpy implementations are kept as ``*_ref`` reference oracles for the
+tests.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,12 +104,61 @@ class Stats(NamedTuple):
         return float(self.latency_sum) / max(int(self.total), 1)
 
 
+class PolicyFlags(NamedTuple):
+    """Traced write-policy predicates (see :mod:`repro.core.policies`).
+
+    As scalars these jit-fold to the static-policy code; as ``[V]`` arrays
+    they let one batched dispatch serve VMs with different policies.
+    """
+    allocates_reads: jax.Array   # bool
+    write_invalidates: jax.Array
+    holds_dirty: jax.Array
+    write_through: jax.Array
+
+
+def policy_flags(policy: Policy | Sequence[Policy]) -> PolicyFlags:
+    """Build :class:`PolicyFlags` from one Policy (scalars) or a per-VM
+    sequence (``[V]`` bool arrays)."""
+    if isinstance(policy, Policy):
+        return PolicyFlags(
+            jnp.asarray(policy.allocates_reads),
+            jnp.asarray(policy.write_invalidates),
+            jnp.asarray(policy.holds_dirty),
+            jnp.asarray(policy.write_through),
+        )
+    ps = list(policy)
+    return PolicyFlags(
+        jnp.asarray([p.allocates_reads for p in ps]),
+        jnp.asarray([p.write_invalidates for p in ps]),
+        jnp.asarray([p.holds_dirty for p in ps]),
+        jnp.asarray([p.write_through for p in ps]),
+    )
+
+
 def make_cache(num_sets: int, ways: int) -> CacheState:
     return CacheState(
         tags=jnp.full((num_sets, ways), -1, jnp.int32),
         lru=jnp.full((num_sets, ways), -1, jnp.int32),
         dirty=jnp.zeros((num_sets, ways), bool),
     )
+
+
+def make_cache_batch(num_vms: int, num_sets: int, ways: int) -> CacheState:
+    """Stacked per-VM caches: every leaf carries a leading ``[V]`` axis."""
+    return CacheState(
+        tags=jnp.full((num_vms, num_sets, ways), -1, jnp.int32),
+        lru=jnp.full((num_vms, num_sets, ways), -1, jnp.int32),
+        dirty=jnp.zeros((num_vms, num_sets, ways), bool),
+    )
+
+
+def stack_states(states: Sequence[CacheState]) -> CacheState:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_states(state: CacheState) -> list[CacheState]:
+    v = state.tags.shape[0]
+    return [jax.tree_util.tree_map(lambda x: x[i], state) for i in range(v)]
 
 
 def capacity_to_ways(capacity_blocks: int | jax.Array, num_sets: int,
@@ -140,13 +222,14 @@ def _invalidate(state: CacheState, s, way, pred):
 # single level
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("policy",))
-def simulate_single_level(addr, is_write, state: CacheState, ways_active,
-                          policy: Policy, t_cache=T_SSD, t0=0):
-    """Run one request window through a single-level cache.
+def _simulate_single_level(addr, is_write, state: CacheState, ways_active,
+                           flags: PolicyFlags, t_cache, t0):
+    """Unjitted single-level core over traced :class:`PolicyFlags`.
 
-    Returns (state, Stats, t_end). ``t0`` is the running logical clock so
-    LRU order survives across windows.
+    With scalar (Python-bool) flags XLA folds the selects back to the
+    static-policy code; with traced flags the same step serves any policy,
+    which is what lets :func:`simulate_single_level_batch` vmap VMs with
+    heterogeneous policies in one dispatch.
     """
     num_sets = state.tags.shape[0]
     ways_active = jnp.asarray(ways_active, jnp.int32)
@@ -165,7 +248,7 @@ def simulate_single_level(addr, is_write, state: CacheState, ways_active,
             lat = jnp.where(hit, t_cache, jnp.float32(T_HDD))
             st = jax.lax.cond(hit, lambda c: _touch(c, s, way, t, False),
                               lambda c: c, st)
-            do_alloc = (~hit) & policy.allocates_reads
+            do_alloc = (~hit) & flags.allocates_reads
             st2, ins, _, ev_dirty = _insert(st, s, a, t, False, ways_active)
             st = jax.tree_util.tree_map(
                 lambda x, y: jnp.where(do_alloc, y, x), st, st2)
@@ -175,29 +258,34 @@ def simulate_single_level(addr, is_write, state: CacheState, ways_active,
                              (~hit).astype(jnp.int32), dw, lat)
 
         def on_write(st):
-            if policy.write_invalidates:  # RO: bypass + invalidate stale copy
-                st = _invalidate(st, s, way, hit)
-                return st, Stats(0, 1, 0, 0, 0, 0, 0, 1,
-                                 jnp.float32(T_HDD_WRITE))
-            # WB/WT/WO/WBWO: write-allocate. WT commits synchronously, so
-            # its cached copy stays clean (no write-pending data).
-            mark_dirty = policy.holds_dirty
+            inval = flags.write_invalidates
+            # RO branch: bypass + invalidate the stale cached copy
+            st_ro = _invalidate(st, s, way, hit & inval)
+            # allocating branch (WB/WT/WO/WBWO): write-allocate. WT commits
+            # synchronously, so its cached copy stays clean.
+            mark_dirty = flags.holds_dirty
             st_hit = _touch(st, s, way, t, mark_dirty)
             st_ins, ins, _, ev_dirty = _insert(st, s, a, t, mark_dirty,
                                                ways_active)
-            st = jax.tree_util.tree_map(
+            st_alloc = jax.tree_util.tree_map(
                 lambda h, i: jnp.where(hit, h, i), st_hit, st_ins)
+            st = jax.tree_util.tree_map(
+                lambda r, al: jnp.where(inval, r, al), st_ro, st_alloc)
             committed = hit | ins
-            cw = committed.astype(jnp.int32)
+            cw = jnp.where(inval, 0, committed.astype(jnp.int32))
+            wh = jnp.where(inval, 0, hit.astype(jnp.int32))
             # write-through also commits to disk synchronously
-            sync = jnp.int32(1 if policy.write_through else 0)
-            dw = sync + jnp.where((~hit) & ins & ev_dirty, 1, 0) \
+            sync = flags.write_through.astype(jnp.int32)
+            dw_alloc = sync + jnp.where((~hit) & ins & ev_dirty, 1, 0) \
                 + jnp.where(~committed, 1, 0)
-            lat = jnp.where(
+            dw = jnp.where(inval, 1, dw_alloc)
+            lat_alloc = jnp.where(
                 committed,
-                jnp.float32(T_HDD_WRITE) if policy.write_through else t_cache,
+                jnp.where(flags.write_through, jnp.float32(T_HDD_WRITE),
+                          t_cache),
                 jnp.float32(T_HDD_WRITE))
-            return st, Stats(0, 1, 0, 0, hit.astype(jnp.int32), cw, 0, dw, lat)
+            lat = jnp.where(inval, jnp.float32(T_HDD_WRITE), lat_alloc)
+            return st, Stats(0, 1, 0, 0, wh, cw, 0, dw, lat)
 
         st, ds = jax.lax.cond(w, lambda c: on_write(c), lambda c: on_read(c), st)
         # mask out padded requests entirely
@@ -212,19 +300,45 @@ def simulate_single_level(addr, is_write, state: CacheState, ways_active,
     return state, stats, t_end
 
 
+@functools.partial(jax.jit, static_argnames=("policy",))
+def simulate_single_level(addr, is_write, state: CacheState, ways_active,
+                          policy: Policy, t_cache=T_SSD, t0=0):
+    """Run one request window through a single-level cache.
+
+    Returns (state, Stats, t_end). ``t0`` is the running logical clock so
+    LRU order survives across windows.
+    """
+    return _simulate_single_level(addr, is_write, state, ways_active,
+                                  policy_flags(policy), t_cache, t0)
+
+
+@jax.jit
+def simulate_single_level_batch(addr, is_write, state: CacheState,
+                                ways_active, flags: PolicyFlags,
+                                t_cache=T_SSD, t0=0):
+    """Batched :func:`simulate_single_level`: one dispatch for V VMs.
+
+    ``addr``/``is_write`` are ``[V, N]``; ``state`` leaves are
+    ``[V, S, W]``; ``ways_active``, ``t0`` and each :class:`PolicyFlags`
+    field are ``[V]`` (build with :func:`policy_flags`); ``t_cache`` is a
+    shared scalar. Returns (state, Stats, t_end) with a ``[V]`` axis on
+    every leaf, bit-identical per VM to the unbatched function.
+    """
+    v = jnp.shape(addr)[0]
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    return jax.vmap(
+        _simulate_single_level, in_axes=(0, 0, 0, 0, 0, None, 0)
+    )(jnp.asarray(addr, jnp.int32), jnp.asarray(is_write), state,
+      jnp.asarray(ways_active, jnp.int32), flags, jnp.float32(t_cache), t0)
+
+
 # ---------------------------------------------------------------------------
 # two level (ETICA §4.1/§4.2)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def simulate_two_level(addr, is_write, dram: CacheState, ssd: CacheState,
-                       ways_dram, ways_ssd, mode: str = "full", t0=0):
-    """ETICA datapath: DRAM is RO (reads allocate, writes bypass+invalidate);
-    SSD is WBWO. ``mode="full"`` = pull-mode SSD (no datapath updates on
-    miss — contents only change via write hits and the periodic
-    promotion/eviction maintenance). ``mode="npe"`` = write misses allocate
-    in the SSD on the datapath (ETICA-NPE in §5.3).
-    """
+def _simulate_two_level(addr, is_write, dram: CacheState, ssd: CacheState,
+                        ways_dram, ways_ssd, mode: str, t0):
+    """Unjitted two-level core (``mode`` is a Python static)."""
     assert mode in ("full", "npe")
     ns_d = dram.tags.shape[0]
     ns_s = ssd.tags.shape[0]
@@ -300,12 +414,216 @@ def simulate_two_level(addr, is_write, dram: CacheState, ssd: CacheState,
     return dram, ssd, stats, t_end
 
 
+@functools.partial(jax.jit, static_argnames=("mode",))
+def simulate_two_level(addr, is_write, dram: CacheState, ssd: CacheState,
+                       ways_dram, ways_ssd, mode: str = "full", t0=0):
+    """ETICA datapath: DRAM is RO (reads allocate, writes bypass+invalidate);
+    SSD is WBWO. ``mode="full"`` = pull-mode SSD (no datapath updates on
+    miss — contents only change via write hits and the periodic
+    promotion/eviction maintenance). ``mode="npe"`` = write misses allocate
+    in the SSD on the datapath (ETICA-NPE in §5.3).
+    """
+    return _simulate_two_level(addr, is_write, dram, ssd, ways_dram,
+                               ways_ssd, mode, t0)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def simulate_two_level_batch(addr, is_write, dram: CacheState,
+                             ssd: CacheState, ways_dram, ways_ssd,
+                             mode: str = "full", t0=0):
+    """Batched :func:`simulate_two_level`: one dispatch for V VMs.
+
+    ``addr``/``is_write`` are ``[V, N]``; both cache pytrees carry a
+    leading ``[V]`` axis; ``ways_dram``/``ways_ssd``/``t0`` are ``[V]``.
+    ``mode`` stays static (global to the hierarchy). Bit-identical per VM
+    to the unbatched function.
+    """
+    v = jnp.shape(addr)[0]
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    return jax.vmap(
+        lambda a, w, dr, ss, wd, ws, tt: _simulate_two_level(
+            a, w, dr, ss, wd, ws, mode, tt),
+        in_axes=(0, 0, 0, 0, 0, 0, 0),
+    )(jnp.asarray(addr, jnp.int32), jnp.asarray(is_write), dram, ssd,
+      jnp.asarray(ways_dram, jnp.int32), jnp.asarray(ways_ssd, jnp.int32),
+      t0)
+
+
 # ---------------------------------------------------------------------------
-# maintenance helpers (between-interval, host side — paper: asynchronous)
+# maintenance ops (between-interval — paper: asynchronous). Vectorized
+# jnp implementations with (state, count) contracts; jit-able/vmappable.
 # ---------------------------------------------------------------------------
 
-def resize(state: CacheState, old_ways: int, new_ways: int):
-    """Deactivate ways >= new_ways; returns (state, flushed_dirty_blocks)."""
+def resize(state: CacheState, old_ways, new_ways):
+    """Deactivate ways >= new_ways; returns (state, flushed_dirty_blocks).
+
+    Pure ``jnp`` (jit-able; counts are 0-d arrays). A grow (``new_ways >=
+    old_ways``) is a no-op with 0 flushes, matching :func:`resize_ref`.
+    """
+    old_ways = jnp.asarray(old_ways, jnp.int32)
+    new_ways = jnp.asarray(new_ways, jnp.int32)
+    w = state.tags.shape[1]
+    shrink = new_ways < old_ways
+    clear = shrink & (jnp.arange(w) >= new_ways)          # [W]
+    flushed = jnp.sum(state.dirty & clear[None, :]).astype(jnp.int32)
+    return CacheState(
+        tags=jnp.where(clear[None, :], -1, state.tags),
+        lru=jnp.where(clear[None, :], -1, state.lru),
+        dirty=jnp.where(clear[None, :], False, state.dirty),
+    ), flushed
+
+
+resize_batch = jax.jit(jax.vmap(resize))
+"""Map :func:`resize` over stacked ``[V, S, W]`` states and ``[V]`` way
+counts in one dispatch; returns (stacked state, ``[V]`` flush counts)."""
+
+
+def resident_blocks(state: CacheState, ways_active: int) -> np.ndarray:
+    tags = np.asarray(state.tags)[:, : max(ways_active, 0)]
+    return tags[tags >= 0]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pad_addrs(addrs) -> np.ndarray:
+    """Round a maintenance queue up to the next power-of-two length with
+    -1 no-op entries, so jitted maintenance compiles O(log max_len) times
+    instead of once per distinct queue length."""
+    a = np.asarray(addrs).reshape(-1).astype(np.int32)
+    return np.pad(a, (0, _next_pow2(a.size) - a.size), constant_values=-1)
+
+
+@jax.jit
+def _evict_blocks_impl(state: CacheState, addrs):
+    mask = jnp.isin(state.tags, addrs) & (state.tags >= 0)
+    flushed = jnp.sum(state.dirty & mask).astype(jnp.int32)
+    return CacheState(
+        tags=jnp.where(mask, -1, state.tags),
+        lru=jnp.where(mask, -1, state.lru),
+        dirty=jnp.where(mask, False, state.dirty),
+    ), flushed
+
+
+def evict_blocks(state: CacheState, addrs):
+    """Evict given blocks (maintenance). Returns (state, flushed_dirty).
+
+    Vectorized jitted ``jnp``; ``addrs`` entries of -1 are ignored
+    (padding), and inputs are bucketed to power-of-two lengths so ragged
+    per-VM eviction queues reuse a handful of compiled executables.
+    """
+    if np.size(addrs) == 0:
+        return state, jnp.int32(0)
+    return _evict_blocks_impl(state, _pad_addrs(addrs))
+
+
+@jax.jit
+def _promote_blocks_impl(state: CacheState, addrs, ways_active, t):
+    tags, lru, dirty = state
+    s_count, w_count = tags.shape
+    n = addrs.shape[0]
+    valid = addrs >= 0
+    sets = jnp.where(valid, addrs % s_count, 0)
+    active = jnp.arange(w_count) < ways_active               # [W]
+
+    # first-occurrence dedupe: stable sort groups duplicates with original
+    # order preserved, so the group head is the first occurrence
+    order = jnp.argsort(addrs, stable=True)
+    sorted_a = addrs[order]
+    head = jnp.concatenate(
+        [jnp.ones(1, bool), sorted_a[1:] != sorted_a[:-1]])
+    first = jnp.zeros(n, bool).at[order].set(head)
+
+    present = jnp.any((tags[sets] == addrs[:, None]) & active[None, :],
+                      axis=1)
+    elig = valid & first & ~present & (ways_active > 0)
+
+    # rank of each eligible address among eligible addresses of its set,
+    # in original order: stable-sort by set (ineligible -> sentinel group),
+    # then position within group = index - running group start
+    key = jnp.where(elig, sets, jnp.int32(s_count))
+    perm = jnp.argsort(key, stable=True)
+    ksort = key[perm]
+    newgrp = jnp.concatenate([jnp.ones(1, bool), ksort[1:] != ksort[:-1]])
+    idx = jnp.arange(n)
+    grp_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(newgrp, idx, 0))
+    rank = jnp.zeros(n, jnp.int32).at[perm].set(
+        (idx - grp_start).astype(jnp.int32))
+
+    # k-th eligible address of a set lands in the set's k-th free way
+    free = active[None, :] & (tags < 0)                      # [S, W]
+    freerank = jnp.cumsum(free, axis=1) - 1                  # [S, W]
+    nfree = free.sum(axis=1)                                 # [S]
+    promoted = elig & (rank < nfree[sets])
+    way = jnp.argmax((freerank[sets] == rank[:, None]) & free[sets], axis=1)
+
+    rows = jnp.where(promoted, sets, jnp.int32(s_count))     # OOB -> dropped
+    return CacheState(
+        tags=tags.at[rows, way].set(addrs, mode="drop"),
+        lru=lru.at[rows, way].set(t, mode="drop"),
+        dirty=dirty.at[rows, way].set(False, mode="drop"),
+    ), jnp.sum(promoted).astype(jnp.int32)
+
+
+def promote_blocks(state: CacheState, addrs, ways_active, t):
+    """Insert blocks into FREE active ways only (paper: promote "only when
+    there is free space in SSD"). Returns (state, n_promoted).
+
+    Vectorized jitted ``jnp`` with the exact semantics of the sequential
+    reference (:func:`promote_blocks_ref`): first occurrence of each
+    address wins, addresses already resident are skipped, and free ways
+    fill in ascending way order in ``addrs`` order. ``addrs`` entries of
+    -1 are ignored (padding), and inputs are bucketed to power-of-two
+    lengths to bound recompiles across queue sizes.
+    """
+    if np.size(addrs) == 0:
+        return state, jnp.int32(0)
+    return _promote_blocks_impl(state, _pad_addrs(addrs),
+                                jnp.asarray(ways_active, jnp.int32),
+                                jnp.asarray(t, jnp.int32))
+
+
+_evict_blocks_vmapped = jax.jit(jax.vmap(_evict_blocks_impl))
+_promote_blocks_vmapped = jax.jit(jax.vmap(_promote_blocks_impl))
+
+
+def _pad_addrs_batch(queues: Sequence[np.ndarray]) -> np.ndarray:
+    """Stack ragged per-VM maintenance queues into a [V, Q] rectangle of a
+    power-of-two width, padding with -1 no-ops."""
+    q = _next_pow2(max((np.size(a) for a in queues), default=0))
+    out = np.full((len(queues), max(q, 1)), -1, np.int32)
+    for v, a in enumerate(queues):
+        a = np.asarray(a).reshape(-1)
+        out[v, : a.size] = a
+    return out
+
+
+def evict_blocks_batch(state: CacheState, queues: Sequence[np.ndarray]):
+    """Per-VM :func:`evict_blocks` over a stacked ``[V, S, W]`` state in
+    one vmapped dispatch. ``queues`` is one (possibly empty) address array
+    per VM; returns (stacked state, ``[V]`` flush counts)."""
+    return _evict_blocks_vmapped(state, _pad_addrs_batch(queues))
+
+
+def promote_blocks_batch(state: CacheState, queues: Sequence[np.ndarray],
+                         ways_active, t):
+    """Per-VM :func:`promote_blocks` over a stacked ``[V, S, W]`` state in
+    one vmapped dispatch. ``ways_active``/``t`` are ``[V]``; returns
+    (stacked state, ``[V]`` promotion counts)."""
+    return _promote_blocks_vmapped(state, _pad_addrs_batch(queues),
+                                   jnp.asarray(ways_active, jnp.int32),
+                                   jnp.asarray(t, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# numpy reference oracles for the maintenance ops (sequential semantics the
+# vectorized versions above must reproduce exactly — kept for the tests)
+# ---------------------------------------------------------------------------
+
+def resize_ref(state: CacheState, old_ways: int, new_ways: int):
+    """Sequential numpy reference for :func:`resize`."""
     if new_ways >= old_ways:
         return state, 0
     tags = np.asarray(state.tags).copy()
@@ -318,13 +636,8 @@ def resize(state: CacheState, old_ways: int, new_ways: int):
     return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), flushed
 
 
-def resident_blocks(state: CacheState, ways_active: int) -> np.ndarray:
-    tags = np.asarray(state.tags)[:, : max(ways_active, 0)]
-    return tags[tags >= 0]
-
-
-def evict_blocks(state: CacheState, addrs: np.ndarray):
-    """Evict given blocks (maintenance). Returns (state, flushed_dirty)."""
+def evict_blocks_ref(state: CacheState, addrs: np.ndarray):
+    """Sequential numpy reference for :func:`evict_blocks`."""
     tags = np.asarray(state.tags).copy()
     lru = np.asarray(state.lru).copy()
     dirty = np.asarray(state.dirty).copy()
@@ -336,16 +649,17 @@ def evict_blocks(state: CacheState, addrs: np.ndarray):
     return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), flushed
 
 
-def promote_blocks(state: CacheState, addrs: np.ndarray, ways_active: int,
-                   t: int):
-    """Insert blocks into FREE active ways only (paper: promote "only when
-    there is free space in SSD"). Returns (state, n_promoted)."""
+def promote_blocks_ref(state: CacheState, addrs: np.ndarray,
+                       ways_active: int, t: int):
+    """Sequential numpy reference for :func:`promote_blocks`."""
     tags = np.asarray(state.tags).copy()
     lru = np.asarray(state.lru).copy()
     dirty = np.asarray(state.dirty).copy()
     num_sets, _ = tags.shape
     n = 0
     for a in np.asarray(addrs):
+        if a < 0:
+            continue
         s = int(a) % num_sets
         if (tags[s, :ways_active] == a).any():
             continue

@@ -50,5 +50,5 @@ class GlobalLRUManager(TwoTierKVManager):
         return super().activate(sid)
 
     # no POD repartitioning, no popularity maintenance
-    def _maintenance_tick(self):
+    def _maintenance_tick(self, active_sid: int | None = None):
         pass

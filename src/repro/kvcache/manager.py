@@ -172,7 +172,7 @@ class TwoTierKVManager:
             self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_np, dt))
             self.stats.dma_read_bytes += self.cfg.page_bytes
             self.stats.latency_s += self.cfg.page_bytes / PCIE_BW
-        self._maintenance_tick()
+        self._maintenance_tick(active_sid=sid)
         return self.page_table(sid)
 
     def append_page(self, sid: int, k_page: np.ndarray, v_page: np.ndarray):
@@ -207,12 +207,12 @@ class TwoTierKVManager:
         self._since_maint += 1
         self._since_resize += 1
 
-    def _maintenance_tick(self):
+    def _maintenance_tick(self, active_sid: int | None = None):
         cfg = self.cfg
         if self._since_maint >= cfg.maintenance_interval:
             self._since_maint = 0
             self._update_popularity()
-            self._evict_cold()
+            self._evict_cold(exclude_sid=active_sid)
         if self._since_resize >= cfg.resize_interval:
             self._since_resize = 0
             self._repartition()
@@ -236,16 +236,18 @@ class TwoTierKVManager:
             if mask.any():
                 self.trackers[t].update(addr[mask], contrib[mask])
 
-    def _evict_cold(self):
+    def _evict_cold(self, exclude_sid: int | None = None):
         """Pull-mode eviction queue: drop the coldest resident sessions'
-        pages down to quota (clean copies — no write-back)."""
+        pages down to quota (clean copies — no write-back). The actively
+        decoding session is never a victim: its page table was just handed
+        to the batch, so its slots must stay owned until deactivation."""
         for t in range(self.num_tenants):
             over = self.tenant_used[t] - self.tenant_quota[t]
             if over <= 0:
                 continue
             resident = {}
             for slot, (sid, lp) in list(self.slot_owner.items()):
-                if self.sessions[sid].tenant == t:
+                if self.sessions[sid].tenant == t and sid != exclude_sid:
                     resident.setdefault(sid, []).append(lp)
             order = sorted(resident, key=lambda s: self.trackers[t].score(s))
             for sid in order:

@@ -178,6 +178,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["compile_s"] = round(time.time() - t1, 2)
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     rec["xla_cost_flops"] = float(ca.get("flops", 0.0))
     rec["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
     try:

@@ -1,0 +1,87 @@
+"""Test-suite bootstrap.
+
+The property tests use ``hypothesis`` when it is installed (CI installs it
+via ``requirements-dev.txt``). Environments without it — the tier-1
+command must run everywhere — get a minimal deterministic stand-in that
+implements exactly the surface these tests use (``given``, ``settings``,
+and the ``integers``/``booleans``/``tuples``/``lists``/``map`` strategy
+combinators). The stand-in draws from a fixed-seed numpy generator, so
+runs are reproducible; it performs no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+try:  # pragma: no cover - exercised implicitly when hypothesis exists
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+    def lists(elem, min_size=0, max_size=None):
+        hi = 32 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.integers(min_size, hi + 1))
+            return [elem._draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_settings = {"max_examples": max_examples}
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                conf = (getattr(wrapper, "_stub_settings", None)
+                        or getattr(fn, "_stub_settings", None) or {})
+                examples = conf.get("max_examples") or 20
+                rng = np.random.default_rng(0xE71CA)
+                for _ in range(examples):
+                    drawn = tuple(s._draw(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # pytest must not mistake the drawn parameters for fixtures:
+            # hide the wrapped signature and present a parameterless one
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature([])
+            return wrapper
+        return deco
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = given
+    stub.settings = settings
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    strategies_mod.integers = integers
+    strategies_mod.booleans = booleans
+    strategies_mod.tuples = tuples
+    strategies_mod.lists = lists
+    stub.strategies = strategies_mod
+    stub.__is_stub__ = True
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = strategies_mod

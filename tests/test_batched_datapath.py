@@ -1,0 +1,150 @@
+"""Batched (vmap) datapath == sequential per-VM loop, bit for bit.
+
+The batched entry points must produce identical Stats and final
+CacheStates to running the unbatched simulators per VM — including
+heterogeneous per-VM ways/policies and padded ``addr == -1`` no-ops —
+and the controllers must produce identical VMResults in both modes.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.core import (EticaCache, EticaConfig, Geometry, Policy, Stats,
+                        Trace, interleave, make_cache, make_cache_batch,
+                        make_eci_cache, policy_flags, simulate_single_level,
+                        simulate_single_level_batch, simulate_two_level,
+                        simulate_two_level_batch)
+
+V, N, S, W = 3, 96, 4, 4
+WAYS = np.array([4, 2, 0], np.int32)       # heterogeneous allocations
+T0 = np.array([0, 5, 7], np.int32)         # heterogeneous clocks
+
+
+def _requests(seed=0, pad_frac=0.15, addr_space=24):
+    rng = np.random.default_rng(seed)
+    addr = rng.integers(0, addr_space, (V, N)).astype(np.int32)
+    addr[rng.random((V, N)) < pad_frac] = -1   # padded no-ops mid-stream
+    is_write = rng.random((V, N)) < 0.4
+    return addr, is_write
+
+
+def _assert_tree_equal(a, b, msg=""):
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+def _vm(tree, v):
+    return jax.tree_util.tree_map(lambda x: x[v], tree)
+
+
+def test_single_level_batch_matches_sequential_all_policies():
+    addr, is_write = _requests()
+    for policy in Policy:
+        batch = simulate_single_level_batch(
+            addr, is_write, make_cache_batch(V, S, W), WAYS,
+            policy_flags([policy] * V), t0=T0)
+        for v in range(V):
+            st, stats, t_end = simulate_single_level(
+                addr[v], is_write[v], make_cache(S, W), WAYS[v], policy,
+                t0=int(T0[v]))
+            _assert_tree_equal(st, _vm(batch[0], v), f"{policy} state")
+            _assert_tree_equal(stats, Stats(*[f[v] for f in batch[1]]),
+                               f"{policy} stats")
+            assert int(t_end) == int(batch[2][v])
+
+
+def test_single_level_batch_heterogeneous_policies():
+    """ECI-Cache's regime: different write policies per VM, one dispatch."""
+    addr, is_write = _requests(seed=1)
+    policies = [Policy.RO, Policy.WB, Policy.WT]
+    batch = simulate_single_level_batch(
+        addr, is_write, make_cache_batch(V, S, W), WAYS,
+        policy_flags(policies), t0=T0)
+    for v in range(V):
+        st, stats, _ = simulate_single_level(
+            addr[v], is_write[v], make_cache(S, W), WAYS[v], policies[v],
+            t0=int(T0[v]))
+        _assert_tree_equal(st, _vm(batch[0], v))
+        _assert_tree_equal(stats, Stats(*[f[v] for f in batch[1]]))
+
+
+def test_two_level_batch_matches_sequential_both_modes():
+    addr, is_write = _requests(seed=2)
+    ways_ssd = np.array([4, 3, 1], np.int32)
+    for mode in ("full", "npe"):
+        batch = simulate_two_level_batch(
+            addr, is_write, make_cache_batch(V, S, W),
+            make_cache_batch(V, 8, 4), WAYS, ways_ssd, mode=mode, t0=T0)
+        for v in range(V):
+            dram, ssd, stats, t_end = simulate_two_level(
+                addr[v], is_write[v], make_cache(S, W), make_cache(8, 4),
+                WAYS[v], ways_ssd[v], mode=mode, t0=int(T0[v]))
+            _assert_tree_equal(dram, _vm(batch[0], v), f"{mode} dram")
+            _assert_tree_equal(ssd, _vm(batch[1], v), f"{mode} ssd")
+            _assert_tree_equal(stats, Stats(*[f[v] for f in batch[2]]),
+                               f"{mode} stats")
+            assert int(t_end) == int(batch[3][v])
+
+
+def test_fully_padded_rows_are_noops():
+    """A VM with only addr == -1 requests keeps its state and clock."""
+    addr, is_write = _requests(seed=3)
+    addr[1] = -1
+    is_write[1] = False
+    batch = simulate_two_level_batch(
+        addr, is_write, make_cache_batch(V, S, W), make_cache_batch(V, S, W),
+        WAYS, WAYS, mode="npe", t0=T0)
+    empty = make_cache(S, W)
+    _assert_tree_equal(empty, _vm(batch[0], 1))
+    _assert_tree_equal(empty, _vm(batch[1], 1))
+    assert all(int(f[1]) == 0 for f in batch[2][:-1])
+    assert float(batch[2].latency_sum[1]) == 0.0
+    assert int(batch[3][1]) == int(T0[1])
+
+
+def _mixed_trace(num_vms=3, reqs=2500):
+    from repro.traces import make
+    return interleave(
+        [make(n, reqs, seed=i, addr_offset=i * 10_000_000, scale=0.25)
+         for i, n in enumerate(["hm_1", "usr_0", "web_3"][:num_vms])],
+        seed=0)
+
+
+def test_etica_controller_batched_equals_sequential():
+    geo = Geometry(num_sets=8, max_ways=16)
+    trace = _mixed_trace()
+    for mode in ("full", "npe"):
+        results = {}
+        caches = {}
+        for batched in (True, False):
+            cfg = EticaConfig(dram_capacity=60, ssd_capacity=120,
+                              geometry_dram=geo, geometry_ssd=geo,
+                              resize_interval=1500, promo_interval=500,
+                              mode=mode, batched=batched)
+            cache = EticaCache(cfg, 3)
+            results[batched] = cache.run(trace)
+            caches[batched] = cache
+        for v in range(3):
+            assert results[True][v].stats == results[False][v].stats, (mode, v)
+            assert np.array_equal(results[True][v].alloc_history,
+                                  results[False][v].alloc_history)
+            _assert_tree_equal(caches[True].vm_dram(v),
+                               caches[False].vm_dram(v), f"{mode} dram {v}")
+            _assert_tree_equal(caches[True].vm_ssd(v),
+                               caches[False].vm_ssd(v), f"{mode} ssd {v}")
+
+
+def test_single_level_controller_batched_equals_sequential():
+    """ECI-Cache chassis: dynamic per-VM policies through the batched path."""
+    geo = Geometry(num_sets=8, max_ways=16)
+    trace = _mixed_trace()
+    results = {}
+    for batched in (True, False):
+        cache = make_eci_cache(120, 3, geometry=geo, resize_interval=1500,
+                               sim_chunk=500)
+        cache.cfg = dataclasses.replace(cache.cfg, batched=batched)
+        cache.__init__(cache.cfg, 3, cache.metric, cache.policy_fn)
+        results[batched] = cache.run(trace)
+    for v in range(3):
+        assert results[True][v].stats == results[False][v].stats, v

@@ -1,0 +1,132 @@
+"""Vectorized maintenance ops == sequential numpy references.
+
+`resize` / `evict_blocks` / `promote_blocks` are jit-able jnp ops; the
+original numpy implementations are kept as ``*_ref`` oracles. On
+randomized states the vectorized versions must produce identical states
+and counts — including promote's ordering contract (first occurrence
+wins, free active ways fill in ascending order in queue order) and -1
+padding entries being ignored.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.simulator import (CacheState, evict_blocks, evict_blocks_ref,
+                                  evict_blocks_batch, promote_blocks,
+                                  promote_blocks_batch, promote_blocks_ref,
+                                  resize, resize_batch, resize_ref,
+                                  resident_blocks, stack_states)
+
+
+def random_state(rng, num_sets, ways, addr_space=40):
+    tags = rng.integers(-1, addr_space, (num_sets, ways)).astype(np.int32)
+    for s in range(num_sets):       # a set never holds duplicate tags
+        seen = set()
+        for w in range(ways):
+            if int(tags[s, w]) in seen:
+                tags[s, w] = -1
+            elif tags[s, w] >= 0:
+                seen.add(int(tags[s, w]))
+    lru = rng.integers(-1, 100, (num_sets, ways)).astype(np.int32)
+    dirty = (rng.random((num_sets, ways)) < 0.5) & (tags >= 0)
+    return CacheState(jnp.asarray(tags), jnp.asarray(lru),
+                      jnp.asarray(dirty))
+
+
+def assert_state_equal(a: CacheState, b: CacheState, msg=""):
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+def test_maintenance_ops_match_numpy_reference():
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        num_sets = int(rng.integers(2, 9))
+        ways = int(rng.integers(1, 9))
+        st = random_state(rng, num_sets, ways)
+
+        old_w, new_w = (int(rng.integers(0, ways + 1)),
+                        int(rng.integers(0, ways + 1)))
+        got, flushed = resize(st, old_w, new_w)
+        want, flushed_ref = resize_ref(st, old_w, new_w)
+        assert int(flushed) == flushed_ref, (trial, old_w, new_w)
+        assert_state_equal(got, want, f"resize trial {trial}")
+
+        ev = rng.integers(-1, 40, int(rng.integers(0, 20)))
+        got, flushed = evict_blocks(st, ev)
+        want, flushed_ref = evict_blocks_ref(st, np.asarray(ev))
+        assert int(flushed) == flushed_ref, trial
+        assert_state_equal(got, want, f"evict trial {trial}")
+
+        pr = rng.integers(-1, 60, int(rng.integers(0, 30)))
+        active = int(rng.integers(0, ways + 1))
+        got, n = promote_blocks(st, pr, active, 99)
+        want, n_ref = promote_blocks_ref(st, np.asarray(pr), active, 99)
+        assert int(n) == n_ref, trial
+        assert_state_equal(got, want, f"promote trial {trial}")
+
+
+def test_promote_fills_only_free_active_ways():
+    rng = np.random.default_rng(11)
+    for trial in range(20):
+        num_sets, ways = 4, 6
+        st = random_state(rng, num_sets, ways)
+        active = int(rng.integers(0, ways + 1))
+        before = np.asarray(st.tags).copy()
+        pr = rng.integers(0, 60, 25)
+        got, n = promote_blocks(st, pr, active, 50)
+        after = np.asarray(got.tags)
+        changed = before != after
+        # only previously-free cells inside the active ways may change
+        assert not changed[:, active:].any()
+        assert (before[changed] == -1).all()
+        assert int(n) == int(changed.sum())
+        # promoted blocks arrive clean with the given timestamp
+        assert not np.asarray(got.dirty)[changed].any()
+        assert (np.asarray(got.lru)[changed] == 50).all()
+
+
+def test_evict_flush_counts_dirty_only():
+    st = CacheState(
+        tags=jnp.asarray([[3, 5], [4, -1]], jnp.int32),
+        lru=jnp.asarray([[1, 2], [3, -1]], jnp.int32),
+        dirty=jnp.asarray([[True, False], [True, False]]),
+    )
+    got, flushed = evict_blocks(st, np.array([3, 4, 99, -1]))
+    assert int(flushed) == 2
+    assert set(resident_blocks(got, 2).tolist()) == {5}
+
+
+def test_batched_maintenance_matches_per_vm():
+    """One vmapped dispatch over stacked states == per-VM calls."""
+    rng = np.random.default_rng(13)
+    num_vms, num_sets, ways = 4, 4, 6
+    states = [random_state(rng, num_sets, ways) for _ in range(num_vms)]
+    stacked = stack_states(states)
+
+    old_w = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    new_w = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    got, flushed = resize_batch(stacked, old_w, new_w)
+    for v in range(num_vms):
+        want, fl = resize_ref(states[v], int(old_w[v]), int(new_w[v]))
+        assert int(flushed[v]) == fl
+        for x, y in zip(want, got):
+            assert np.array_equal(np.asarray(x), np.asarray(y[v]))
+
+    queues = [rng.integers(0, 40, int(rng.integers(0, 12)))
+              for _ in range(num_vms)]
+    got, flushed = evict_blocks_batch(stacked, queues)
+    for v in range(num_vms):
+        want, fl = evict_blocks_ref(states[v], queues[v])
+        assert int(flushed[v]) == fl
+        for x, y in zip(want, got):
+            assert np.array_equal(np.asarray(x), np.asarray(y[v]))
+
+    active = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    ts = rng.integers(0, 100, num_vms).astype(np.int32)
+    got, n = promote_blocks_batch(stacked, queues, active, ts)
+    for v in range(num_vms):
+        want, n_ref = promote_blocks_ref(states[v], queues[v],
+                                         int(active[v]), int(ts[v]))
+        assert int(n[v]) == n_ref
+        for x, y in zip(want, got):
+            assert np.array_equal(np.asarray(x), np.asarray(y[v]))

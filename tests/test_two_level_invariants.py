@@ -1,0 +1,96 @@
+"""Property tests for ETICA's two-level content/reliability invariants.
+
+Paper §4.1/§4.2: the DRAM level is a read-only cache — it may never hold
+dirty (write-pending) data, so all dirty blocks live in the non-volatile
+SSD level, and a write to a DRAM-resident address must invalidate the
+stale DRAM copy rather than update it.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Trace, make_cache, simulate_two_level
+from repro.core.simulator import resident_blocks
+
+SETTINGS = dict(max_examples=15, deadline=None)
+SETS_D, WAYS_D = 4, 4
+SETS_S, WAYS_S = 8, 4
+
+
+def traces(max_size=150, addr_space=20):
+    return st.lists(
+        st.tuples(st.integers(0, addr_space - 1), st.booleans()),
+        min_size=1, max_size=max_size,
+    ).map(lambda ops: Trace(
+        addr=np.array([a for a, _ in ops], np.int32),
+        is_write=np.array([w for _, w in ops], bool)))
+
+
+def run(tr, mode, ways_dram=WAYS_D, ways_ssd=WAYS_S):
+    return simulate_two_level(
+        np.asarray(tr.addr), np.asarray(tr.is_write),
+        make_cache(SETS_D, WAYS_D), make_cache(SETS_S, WAYS_S),
+        ways_dram, ways_ssd, mode=mode)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_dram_never_dirty(tr):
+    """The volatile level is RO: it never holds write-pending data."""
+    for mode in ("full", "npe"):
+        dram, _, _, _ = run(tr, mode)
+        assert not bool(np.asarray(dram.dirty).any()), mode
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_dirty_blocks_live_only_in_ssd(tr):
+    """Every dirty block in the hierarchy sits in the SSD level and holds
+    an address that was actually written at some point."""
+    written = set(np.asarray(tr.addr)[np.asarray(tr.is_write)].tolist())
+    for mode in ("full", "npe"):
+        dram, ssd, _, _ = run(tr, mode)
+        assert not bool(np.asarray(dram.dirty).any())
+        tags = np.asarray(ssd.tags)
+        dirty = np.asarray(ssd.dirty)
+        assert not (dirty & (tags < 0)).any()       # dirty implies valid
+        for a in tags[dirty].tolist():
+            assert a in written, (mode, a)
+
+
+@given(traces())
+@settings(**SETTINGS)
+def test_write_invalidates_dram_copy(tr):
+    """After the window, no address whose LAST access was a write is
+    DRAM-resident: the write bypassed DRAM and killed the stale copy, and
+    only reads re-promote."""
+    addr = np.asarray(tr.addr)
+    is_write = np.asarray(tr.is_write)
+    last_op_is_write = {}
+    for a, w in zip(addr.tolist(), is_write.tolist()):
+        last_op_is_write[a] = w
+    for mode in ("full", "npe"):
+        dram, _, _, _ = run(tr, mode)
+        for a in resident_blocks(dram, WAYS_D).tolist():
+            assert not last_op_is_write[a], (mode, a)
+
+
+def test_write_invalidate_worked_example():
+    """R(7) promotes 7 into DRAM; W(7) must evict the now-stale copy."""
+    tr = Trace.from_ops([('R', 7), ('W', 7)])
+    for mode in ("full", "npe"):
+        dram, ssd, stats, _ = run(tr, mode)
+        assert 7 not in resident_blocks(dram, WAYS_D).tolist()
+        if mode == "npe":   # write-allocated into the SSD, dirty there
+            assert 7 in resident_blocks(ssd, WAYS_S).tolist()
+            assert bool(np.asarray(ssd.dirty).any())
+
+
+@given(traces(max_size=80))
+@settings(**SETTINGS)
+def test_full_mode_ssd_only_dirties_existing_blocks(tr):
+    """Pull-mode SSD: the datapath never allocates, so every SSD-resident
+    block after the window was already there (here: none, starting empty)
+    — write misses go straight to disk."""
+    _, ssd, stats, _ = run(tr, "full")
+    assert resident_blocks(ssd, WAYS_S).size == 0
+    assert int(stats.cache_writes_l2) == 0
