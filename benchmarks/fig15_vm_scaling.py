@@ -1,10 +1,12 @@
 """Paper Figs. 15 & 16: cache reallocation and hit ratio as VMs come
 online (1 -> 2 -> 4 -> 8 VMs against a fixed total cache), plus the
-batched-datapath head-to-head: one vmapped dispatch for all VMs
+batched-datapath head-to-heads: one vmapped dispatch for all VMs
 (``batched=True``, the default) vs the sequential per-VM dispatch loop
-(``batched=False``, the reference oracle). The head-to-head asserts both
-paths produce *exactly* the same aggregate Stats before reporting the
-wall-clock speedup.
+(``batched=False``, the reference oracle) — for ETICA's two-level
+controller AND for the one-level baseline chassis (ECI-Cache), whose
+sizing metrics now ride the same batched reuse pipeline. Each
+head-to-head asserts both paths produce *exactly* the same aggregate
+Stats before reporting the wall-clock speedup.
 """
 from __future__ import annotations
 
@@ -12,10 +14,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import EticaCache, Trace
+from repro.core import EticaCache, Trace, make_eci_cache
 from repro.traces import make
 
-from .common import Timer, etica_config, row
+from .common import GEO, Timer, etica_config, row
 
 PHASES = [1, 2, 4, 8, 16]
 REQS_PER_PHASE = 4_000
@@ -64,14 +66,12 @@ def scaling_ramp(vm_traces) -> None:
     row("fig15/total", t.us / (REQS_PER_PHASE * sum(PHASES)), "done")
 
 
-def batched_vs_sequential(vm_traces, active: int) -> None:
-    """Head-to-head at ``active`` VMs: identical results, fewer dispatches."""
+def _head_to_head(build, label: str, vm_traces, active: int) -> None:
+    """Batched-vs-sequential protocol shared by every head-to-head:
+    warm-up compile per path, timed runs, exact aggregate-Stats equality
+    assert, then the speedup row. ``build(batched)`` returns a fresh
+    controller."""
     trace = _phase_trace(vm_traces, 0, active)
-
-    def build(batched: bool) -> EticaCache:
-        cfg = dataclasses.replace(etica_config("full", dram=200, ssd=400),
-                                  batched=batched)
-        return EticaCache(cfg, active)
 
     # warm-up pass per path compiles every executable (shapes repeat)
     for batched in (True, False):
@@ -86,13 +86,37 @@ def batched_vs_sequential(vm_traces, active: int) -> None:
     agg_b, time_b = runs[True]
     agg_s, time_s = runs[False]
     assert agg_b == agg_s, (
-        f"batched and sequential paths diverged at {active} VMs:\n"
+        f"{label}: batched and sequential paths diverged at {active} VMs:\n"
         f"  batched:    {agg_b}\n  sequential: {agg_s}")
     speedup = time_s / time_b
-    row(f"fig15/batched_speedup_{active}vms",
+    row(f"fig15/{label}_{active}vms",
         time_b * 1e6 / (active * REQS_PER_PHASE),
         f"speedup={speedup:.2f}x sequential_s={time_s:.2f} "
         f"batched_s={time_b:.2f} stats_equal=True")
+
+
+def batched_vs_sequential(vm_traces, active: int) -> None:
+    """Head-to-head at ``active`` VMs: identical results, fewer dispatches."""
+
+    def build(batched: bool) -> EticaCache:
+        cfg = dataclasses.replace(etica_config("full", dram=200, ssd=400),
+                                  batched=batched)
+        return EticaCache(cfg, active)
+
+    _head_to_head(build, "batched_speedup", vm_traces, active)
+
+
+def baseline_batched_vs_sequential(vm_traces, active: int) -> None:
+    """Same head-to-head for the one-level baseline chassis (ECI-Cache):
+    with batched sizing, URD for all VMs is one vmapped reduction per
+    resize interval instead of a per-VM Python metric loop."""
+
+    def build(batched: bool):
+        return make_eci_cache(600, active, geometry=GEO,
+                              resize_interval=2_000, sim_chunk=500,
+                              batched=batched)
+
+    _head_to_head(build, "eci_batched_speedup", vm_traces, active)
 
 
 def main():
@@ -102,6 +126,7 @@ def main():
                  for i, w in enumerate(WORKLOADS)]
     scaling_ramp(vm_traces)
     batched_vs_sequential(vm_traces, max(PHASES))
+    baseline_batched_vs_sequential(vm_traces, max(PHASES))
 
 
 if __name__ == "__main__":

@@ -29,8 +29,11 @@ from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
                          PartitionedSingleLevelCache, SingleLevelConfig,
                          VMResult)
-from .baselines import (make_centaur, make_eci_cache, make_scave,
-                        make_vcacheshare)
+from .baselines import (SizingMetric, make_centaur, make_eci_cache,
+                        make_scave, make_vcacheshare, reuse_intensity_metric,
+                        reuse_intensity_metric_ref, trd_metric,
+                        trd_metric_ref, urd_metric, urd_metric_ref,
+                        wss_metric, wss_metric_ref)
 
 __all__ = [
     "LEVEL_LATENCY", "Level", "Policy", "T_DRAM", "T_HDD", "T_SSD",
@@ -47,5 +50,8 @@ __all__ = [
     "stack_states", "unstack_states",
     "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
     "PartitionedSingleLevelCache", "SingleLevelConfig", "VMResult",
-    "make_centaur", "make_eci_cache", "make_scave", "make_vcacheshare",
+    "SizingMetric", "make_centaur", "make_eci_cache", "make_scave",
+    "make_vcacheshare", "reuse_intensity_metric",
+    "reuse_intensity_metric_ref", "trd_metric", "trd_metric_ref",
+    "urd_metric", "urd_metric_ref", "wss_metric", "wss_metric_ref",
 ]

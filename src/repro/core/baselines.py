@@ -9,6 +9,28 @@ chassis; they differ in sizing metric + policy chooser):
   * S-CAVE [10]    — WSS (working-set size) sizing, WT.
   * vCacheShare [9]— reuse-intensity sizing, RO (write-around).
 
+Sizing metric definitions (see :mod:`repro.core.reuse` for the shared
+distance engine; ETICA §2.1, Fig. 5):
+
+  * **URD** (ECI-Cache, arXiv:1805.00976): max reuse distance over read
+    re-references only (RAR + RAW); ``demand = max URD + 1`` blocks.
+  * **TRD** (Centaur; classic Mattson stack distance): max reuse distance
+    over *all* re-accesses, read or write; ``demand = max TRD + 1``.
+  * **WSS** (S-CAVE): distinct blocks touched in the window — no distance
+    filtering at all, the over-allocating estimator ETICA criticizes.
+  * **reuse intensity** (vCacheShare): distinct *re-referenced read*
+    blocks — a locality x burstiness proxy; its curve uses POD(RO)
+    distances since vCacheShare runs a read-only (write-around) cache.
+  * ETICA itself replaces all of these with **POD** (§4.3.1, Eq. 2),
+    which also conditions on the cache write policy.
+
+Each metric exists in two forms with bit-identical results: a
+:class:`SizingMetric` whose ``batch`` method reduces *all* VMs' stacked
+reuse-distance histograms in one vmapped jitted dispatch
+(:func:`repro.core.reuse.sizing_metrics_batch`), and the original per-VM
+``*_ref`` closure kept as the sequential oracle that
+``SingleLevelConfig(batched=False)`` exercises.
+
 Global (non-partitioned) two-level baselines, simplified to their content
 policies (used in the motivational comparisons):
 
@@ -20,17 +42,19 @@ policies (used in the motivational comparisons):
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from . import reuse
-from .controller import (Geometry, PartitionedSingleLevelCache,
+from .controller import (Geometry, MetricFn, PartitionedSingleLevelCache,
                          SingleLevelConfig, _mrc_grid)
 from .policies import Policy
 from .trace import Trace
 
 
 # ---------------------------------------------------------------------------
-# sizing metrics
+# sizing metrics — sequential per-VM reference closures (*_ref oracles)
 # ---------------------------------------------------------------------------
 
 def _metric_from_dist(r, n: int, geom: Geometry, points: int):
@@ -40,21 +64,21 @@ def _metric_from_dist(r, n: int, geom: Geometry, points: int):
     return reuse.demand_blocks(int(r.max)), grid, curve
 
 
-def urd_metric(geom: Geometry, points: int = 17):
+def urd_metric_ref(geom: Geometry, points: int = 17) -> MetricFn:
     def metric(sub: Trace):
         r = reuse.urd_distances(sub.addr, sub.is_write)
         return _metric_from_dist(r, len(sub), geom, points)
     return metric
 
 
-def trd_metric(geom: Geometry, points: int = 17):
+def trd_metric_ref(geom: Geometry, points: int = 17) -> MetricFn:
     def metric(sub: Trace):
         r = reuse.trd_distances(sub.addr, sub.is_write)
         return _metric_from_dist(r, len(sub), geom, points)
     return metric
 
 
-def wss_metric(geom: Geometry, points: int = 17):
+def wss_metric_ref(geom: Geometry, points: int = 17) -> MetricFn:
     """S-CAVE: demand = working-set size (distinct blocks touched).
 
     The MRC is still needed for partitioning under pressure; use the
@@ -69,7 +93,7 @@ def wss_metric(geom: Geometry, points: int = 17):
     return metric
 
 
-def reuse_intensity_metric(geom: Geometry, points: int = 17):
+def reuse_intensity_metric_ref(geom: Geometry, points: int = 17) -> MetricFn:
     """vCacheShare: locality x burstiness proxy — distinct re-referenced
     read blocks scaled by access intensity."""
     def metric(sub: Trace):
@@ -81,6 +105,65 @@ def reuse_intensity_metric(geom: Geometry, points: int = 17):
         _, grid, curve = _metric_from_dist(r, len(sub), geom, points)
         return rereferenced, grid, curve
     return metric
+
+
+# ---------------------------------------------------------------------------
+# batched metric protocol: all VMs sized in one vmapped dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SizingMetric:
+    """A baseline sizing metric in both batched and sequential forms.
+
+    ``batch`` reduces every VM's stacked reuse-distance histogram in one
+    vmapped jitted dispatch; ``ref`` is the original per-VM closure the
+    sequential (``batched=False``) controller path uses as its
+    bit-identical oracle. :class:`PartitionedSingleLevelCache` accepts
+    either a plain closure or this object.
+    """
+
+    kind: str                 # one of reuse.SIZING_KINDS
+    # the metric's own MRC size grid (blocks); excluded from eq/hash so
+    # the frozen dataclass stays comparable/hashable despite the ndarray
+    grid: np.ndarray = dataclasses.field(compare=False)
+    ref: MetricFn = dataclasses.field(compare=False)  # sequential oracle
+
+    def batch(self, addrs: list[np.ndarray], writes: list[np.ndarray]):
+        """(demands [V], grid [G], curves [V, G]) for all VMs at once.
+
+        Rows for empty traces are zero — exactly what the sequential loop
+        produces by skipping them.
+        """
+        demands, hits = reuse.sizing_metrics_batch(
+            addrs, writes, self.kind, self.grid)
+        ns = np.array([max(np.shape(a)[0], 1) for a in addrs], np.float64)
+        return demands, self.grid, hits.astype(np.float64) / ns[:, None]
+
+
+def _sizing_metric(kind: str, geom: Geometry, points: int,
+                   ref: MetricFn) -> SizingMetric:
+    return SizingMetric(kind=kind, grid=_mrc_grid(geom, points), ref=ref)
+
+
+def urd_metric(geom: Geometry, points: int = 17) -> SizingMetric:
+    """ECI-Cache's URD sizing (batched + sequential oracle)."""
+    return _sizing_metric("urd", geom, points, urd_metric_ref(geom, points))
+
+
+def trd_metric(geom: Geometry, points: int = 17) -> SizingMetric:
+    """Centaur's TRD sizing (batched + sequential oracle)."""
+    return _sizing_metric("trd", geom, points, trd_metric_ref(geom, points))
+
+
+def wss_metric(geom: Geometry, points: int = 17) -> SizingMetric:
+    """S-CAVE's working-set-size sizing (batched + sequential oracle)."""
+    return _sizing_metric("wss", geom, points, wss_metric_ref(geom, points))
+
+
+def reuse_intensity_metric(geom: Geometry, points: int = 17) -> SizingMetric:
+    """vCacheShare's reuse-intensity sizing (batched + sequential oracle)."""
+    return _sizing_metric("reuse_intensity", geom, points,
+                          reuse_intensity_metric_ref(geom, points))
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,9 @@ All datapath simulation happens in fixed-shape jitted ``lax.scan`` windows
 (padded with addr = -1 no-ops). With ``batched=True`` (the default) the
 per-VM cache states are stacked into one pytree with a leading ``[V]``
 axis and each window simulates **all VMs in one vmapped dispatch**; POD
-sizing and the promotion/eviction maintenance batch across VMs the same
+sizing, the one-level baselines' sizing metrics (URD/TRD/WSS/reuse
+intensity via ``SizingMetric.batch``), and the promotion/eviction
+maintenance batch across VMs the same
 way (one dispatch per stage instead of V). Per-VM ways — and, for the
 one-level chassis, per-VM write policies — are traced operands, so
 heterogeneous allocations and ECI-style dynamic policies share one
@@ -481,10 +483,18 @@ class PartitionedSingleLevelCache:
     per-VM states are stacked (``[V, S, W]``) and each window runs all
     VMs — including heterogeneous per-VM policies — in one vmapped
     dispatch; otherwise states are per-VM lists driven sequentially.
+
+    ``metric`` may be a plain per-VM closure (``MetricFn``) or a
+    :class:`repro.core.baselines.SizingMetric`. With a ``SizingMetric``
+    and ``cfg.batched``, every resize interval sizes *all* VMs in one
+    vmapped jitted reduction over the stacked reuse-distance histograms
+    (zero per-VM Python-loop metric calls) — mirroring how the datapath
+    and maintenance already batch. ``batched=False`` (or a plain closure)
+    evaluates the sequential per-VM oracle, bit-identically.
     """
 
     def __init__(self, cfg: SingleLevelConfig, num_vms: int,
-                 metric: MetricFn, policy_fn: PolicyFn):
+                 metric, policy_fn: PolicyFn):
         self.cfg = cfg
         self.num_vms = num_vms
         self.metric = metric
@@ -512,14 +522,29 @@ class PartitionedSingleLevelCache:
             demands = np.zeros(self.num_vms, np.int64)
             grid = _mrc_grid(cfg.geometry, cfg.mrc_points)
             curves = np.zeros((self.num_vms, grid.size))
-            policies = []
-            for v, sub in enumerate(subs):
-                policies.append(self.policy_fn(sub) if len(sub) else Policy.WB)
-                if len(sub) == 0:
-                    continue
-                d, g_, c_ = self.metric(sub)
-                demands[v] = min(d, cfg.geometry.capacity)
-                curves[v] = np.interp(grid, g_, c_)
+            policies = [self.policy_fn(sub) if len(sub) else Policy.WB
+                        for sub in subs]
+            if cfg.batched and hasattr(self.metric, "batch"):
+                # all VMs' metrics in ONE vmapped reduction over the
+                # stacked reuse-distance histograms (empty rows stay 0)
+                dem, g_, cur = self.metric.batch(
+                    [np.asarray(s.addr) for s in subs],
+                    [np.asarray(s.is_write) for s in subs])
+                same_grid = np.array_equal(g_, grid)
+                for v, sub in enumerate(subs):
+                    if len(sub) == 0:
+                        continue
+                    demands[v] = min(int(dem[v]), cfg.geometry.capacity)
+                    curves[v] = cur[v] if same_grid else np.interp(
+                        grid, g_, cur[v])
+            else:
+                metric_fn = getattr(self.metric, "ref", self.metric)
+                for v, sub in enumerate(subs):
+                    if len(sub) == 0:
+                        continue
+                    d, g_, c_ = metric_fn(sub)
+                    demands[v] = min(d, cfg.geometry.capacity)
+                    curves[v] = np.interp(grid, g_, c_)
             res = _partition(demands, curves, grid, cfg.capacity)
             counts = np.array([len(s) for s in subs], np.float64)
             alloc = _expand_to_capacity(res.alloc, counts, cfg.capacity,

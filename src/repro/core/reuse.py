@@ -1,6 +1,25 @@
 """Reuse-distance engine: TRD, URD, and the paper's POD metric (§4.3.1).
 
-All three metrics are instances of one computation over a *policy-filtered
+Metric definitions (the sizing metrics of ETICA and its baselines):
+
+  * **TRD** — Traditional (Mattson) Reuse Distance: the number of distinct
+    blocks accessed between two consecutive accesses to the same block,
+    counting *every* re-access, read or write (Centaur's sizing metric;
+    ETICA §2.1 / Fig. 5a).
+  * **URD** — Useful Reuse Distance (ECI-Cache, arXiv:1805.00976): TRD
+    restricted to *read* re-references (RAR + RAW) — writes refresh blocks
+    but their own distances do not count toward sizing (ETICA §2.1 /
+    Fig. 5b).
+  * **POD** — Policy Optimized reuse Distance (ETICA §4.3.1, Eq. 2): URD
+    further filtered by the cache *write policy*, so only requests the
+    policy would actually serve occupy blocks or earn a distance (key
+    ideas 1–4, Figs. 8–9). ``demand = max POD + 1`` blocks (Eq. 2's
+    allocation rule; 0 when nothing is served).
+  * **WSS** — Working-Set Size (S-CAVE): the count of distinct blocks
+    touched in the window, regardless of type or policy — the
+    over-allocating estimator ETICA §2.1 criticizes.
+
+All of them are instances of one computation over a *policy-filtered
 sub-trace*:
 
   * ``touch[j]``  — access j inserts-or-hits the cache under the policy and
@@ -223,6 +242,21 @@ def pod_distances(addr, is_write, policy: Policy, chunk: int = 256) -> DistResul
     return _slice(_decompose_jit(a, w, policy, chunk=chunk), n)
 
 
+def _pad_rows(addrs, writes, live: list[int], lens: list[int]):
+    """Stack the live rows of ragged per-VM request lists into rectangular
+    ``[L, b]`` arrays, padded to a common power-of-two bucket with the same
+    never-reused trailing writes as :func:`_pad_trace` (exact, see above)."""
+    b = _bucket(max(lens[v] for v in live))
+    amat = np.empty((len(live), b), np.int32)
+    wmat = np.empty((len(live), b), bool)
+    for i, v in enumerate(live):
+        pad_addr = _PAD_BASE + np.arange(b - lens[v], dtype=np.int32)
+        amat[i] = np.concatenate([np.asarray(addrs[v], np.int32), pad_addr])
+        wmat[i] = np.concatenate(
+            [np.asarray(writes[v], bool), np.ones(b - lens[v], bool)])
+    return amat, wmat
+
+
 @functools.partial(jax.jit,
                    static_argnames=("policy", "sizing_reads_only", "chunk"))
 def _decompose_vmapped(amat, wmat, policy, sizing_reads_only, chunk):
@@ -246,14 +280,7 @@ def _distances_batch(addrs, writes, policy: Policy, sizing_reads_only: bool,
     live = [v for v, n in enumerate(lens) if n > 0]
     if not live:
         return [None] * len(lens)
-    b = _bucket(max(lens[v] for v in live))
-    amat = np.empty((len(live), b), np.int32)
-    wmat = np.empty((len(live), b), bool)
-    for i, v in enumerate(live):
-        pad_addr = _PAD_BASE + np.arange(b - lens[v], dtype=np.int32)
-        amat[i] = np.concatenate([np.asarray(addrs[v], np.int32), pad_addr])
-        wmat[i] = np.concatenate(
-            [np.asarray(writes[v], bool), np.ones(b - lens[v], bool)])
+    amat, wmat = _pad_rows(addrs, writes, live, lens)
     r = _decompose_vmapped(amat, wmat, policy=policy,
                            sizing_reads_only=sizing_reads_only, chunk=chunk)
     out: list[DistResult | None] = [None] * len(lens)
@@ -337,3 +364,119 @@ def mrc(trace, policy: Policy, sizes: np.ndarray) -> np.ndarray:
     r = pod_distances(jnp.asarray(trace.addr), jnp.asarray(trace.is_write), policy)
     hits = hit_counts_at_sizes(r.dist, r.served, jnp.asarray(sizes, jnp.int32))
     return np.asarray(hits, dtype=np.float64) / max(len(trace), 1)
+
+
+# ---------------------------------------------------------------------------
+# Batched sizing reductions (the one-level baselines' metrics, §2.1)
+# ---------------------------------------------------------------------------
+#
+# The one-level baselines (ECI-Cache, Centaur, S-CAVE, vCacheShare) size
+# their per-VM partitions from four metrics that are all reductions over
+# the same policy-filtered distance decompositions computed above:
+#
+#   kind               demand (blocks)              hit-curve channel
+#   ----               ---------------              -----------------
+#   "urd"              max URD + 1                  URD (WB dist, read re-refs)
+#   "trd"              max TRD + 1                  TRD (WB dist, all re-refs)
+#   "wss"              distinct blocks touched      TRD
+#   "reuse_intensity"  re-referenced read blocks    POD(RO)
+#
+# URD and TRD share one decomposition (same all-touch distances, different
+# served masks), so each kind costs exactly one O(N^2) distance pass.
+# ``sizing_metrics_batch`` evaluates one metric for many VM sub-traces in
+# ONE vmapped jitted dispatch — the baseline analogue of
+# :func:`pod_distances_batch` — so controllers never loop over VMs.
+
+SIZING_KINDS = ("urd", "trd", "wss", "reuse_intensity")
+
+_SERVED_BIG = jnp.int32(2**30)  # not-served sentinel for hit counting
+
+
+def sizing_policy(kind: str) -> tuple[Policy, bool]:
+    """The (policy, sizing_reads_only) decomposition a sizing kind rides."""
+    if kind == "reuse_intensity":
+        return Policy.RO, True
+    return Policy.WB, False
+
+
+def sizing_from_dists(addr, is_write, r: DistResult, n_valid, grid,
+                      kind: str):
+    """``(demand, hit_counts[G])`` from a decomposed distance channel.
+
+    The shared post-distance reduction behind both the pure-jnp batched
+    path (:func:`sizing_metrics_batch`) and the Pallas-kernel path
+    (``repro.kernels.reuse_distance.ops.sizing_reduction``): served-mask
+    selection, hit histogram, and the demand scalar. ``r`` must be the
+    :func:`sizing_policy` decomposition for ``kind``. ``n_valid`` masks
+    any pad tail out of the WSS distinct-count (the other reductions are
+    pad-invariant by construction: pads are cold writes to fresh
+    addresses).
+    """
+    is_read = ~is_write
+    served = (r.served & is_read) if kind == "urd" else r.served
+    d = jnp.where(served, r.dist, _SERVED_BIG)
+    hits = jnp.sum(d[None, :] < grid[:, None], axis=1, dtype=jnp.int32)
+    if kind == "wss":
+        valid = jnp.arange(addr.shape[0], dtype=jnp.int32) < n_valid
+        first = _prev_same(addr, jnp.ones_like(is_write)) < 0
+        demand = jnp.sum(first & valid, dtype=jnp.int32)
+    elif kind == "reuse_intensity":
+        prev_read = _prev_same(addr, is_read)
+        next_read = _next_same(addr, is_read)
+        demand = jnp.sum(is_read & (prev_read < 0)
+                         & (next_read < addr.shape[0]), dtype=jnp.int32)
+    else:
+        demand = jnp.maximum(jnp.max(jnp.where(served, r.dist, COLD)) + 1, 0)
+    return demand, hits
+
+
+def _sizing_one(addr, is_write, n_valid, grid, kind: str, chunk: int):
+    """``(demand, hit_counts[G])`` for one (possibly padded) trace: one
+    O(N^2) :func:`_decompose` pass + the shared reduction."""
+    policy, reads_only = sizing_policy(kind)
+    r = _decompose(addr, is_write, policy,
+                   sizing_reads_only=reads_only, chunk=chunk)
+    return sizing_from_dists(addr, is_write, r, n_valid, grid, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "chunk"))
+def _sizing_reduce_vmapped(amat, wmat, nvec, grid, kind, chunk):
+    return jax.vmap(
+        lambda a, w, n: _sizing_one(a, w, n, grid, kind, chunk)
+    )(amat, wmat, nvec)
+
+
+def sizing_metrics_batch(addrs, writes, kind: str, grid,
+                         chunk: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    """Evaluate one sizing metric for many VM sub-traces in ONE dispatch.
+
+    Args:
+      addrs/writes: ragged per-VM request arrays (empty rows allowed).
+      kind: one of :data:`SIZING_KINDS`.
+      grid: ascending candidate cache sizes (blocks) for the hit curve.
+
+    Returns:
+      ``(demands, hit_counts)``: int64 ``[V]`` demanded blocks and int64
+      ``[V, G]`` served-access hit counts at each grid size (zero rows for
+      empty traces). Per-VM values are bit-identical to evaluating the
+      sequential per-VM closures in :mod:`repro.core.baselines` — the
+      padding is the same never-reused trailing writes as
+      :func:`_pad_trace`, which no real distance window can see, and the
+      WSS distinct-count masks the pad tail explicitly.
+    """
+    if kind not in SIZING_KINDS:
+        raise ValueError(f"kind must be one of {SIZING_KINDS}, got {kind!r}")
+    lens = [int(np.shape(a)[0]) for a in addrs]
+    grid = np.asarray(grid, np.int32)
+    demands = np.zeros(len(lens), np.int64)
+    hits = np.zeros((len(lens), grid.size), np.int64)
+    live = [v for v, n in enumerate(lens) if n > 0]
+    if not live:
+        return demands, hits
+    amat, wmat = _pad_rows(addrs, writes, live, lens)
+    nvec = np.array([lens[v] for v in live], np.int32)
+    d, h = _sizing_reduce_vmapped(amat, wmat, nvec, jnp.asarray(grid),
+                                  kind=kind, chunk=chunk)
+    demands[live] = np.asarray(d, np.int64)
+    hits[live] = np.asarray(h, np.int64)
+    return demands, hits

@@ -1,10 +1,30 @@
-"""Jitted wrapper: policy-filtered reuse distances via the Pallas kernel.
+"""Jitted wrappers: policy-filtered reuse distances via the Pallas kernel.
 
 ``reuse_distances`` mirrors ``repro.core.reuse.pod_distances`` but runs
 the O(N^2) distinct-count through the TPU kernel (interpret=True executes
 the same kernel body on CPU for validation). The prev/next-touch
 bookkeeping stays in regular jnp (sort-based, O(N log N)) — it is not the
-hot spot.
+hot spot. ``sizing_reduction`` additionally reduces the kernel-computed
+distance channels into the one-level baselines' sizing metrics.
+
+Metric definitions (ETICA §2.1 / §4.3.1; see ``repro.core.reuse`` for the
+oracle engine these wrappers are tested against):
+
+  * **TRD** — classic Mattson stack distance: distinct blocks between
+    consecutive accesses to the same block, any re-access counting
+    (Centaur's sizing metric).
+  * **URD** — Useful Reuse Distance (ECI-Cache, arXiv:1805.00976): TRD
+    restricted to read re-references (RAR + RAW).
+  * **POD** — Policy Optimized reuse Distance (ETICA Eq. 2): URD further
+    filtered by the cache write policy, so only requests the policy would
+    serve occupy blocks or earn distances; ``demand = max POD + 1``.
+  * **WSS** — working-set size (S-CAVE): distinct blocks touched, no
+    distance filtering.
+
+All of them reduce over the same decomposed distance channels: one
+all-touch (read+write) distance pass serves URD/TRD/WSS, one read-only
+touch pass serves POD(RO), and the served masks select the read, write,
+or total re-reference populations.
 """
 from __future__ import annotations
 
@@ -17,9 +37,15 @@ from .kernel import count_between
 
 
 def reuse_distances(addr, is_write, policy: Policy, *,
+                    sizing_reads_only: bool = True,
                     interpret: bool = True,
                     ti: int = 256, tj: int = 512):
-    """DistResult with the pairwise count computed by the Pallas kernel."""
+    """DistResult with the pairwise count computed by the Pallas kernel.
+
+    ``sizing_reads_only=False`` widens the served set to write
+    re-references too (the TRD convention), matching
+    ``core.reuse._decompose``.
+    """
     addr = jnp.asarray(addr, jnp.int32)
     is_write = jnp.asarray(is_write)
     is_read = ~is_write
@@ -46,5 +72,34 @@ def reuse_distances(addr, is_write, policy: Policy, *,
     next_touch = core_reuse._next_same(addr, touch)
     dist = count_between(prev_touch, touch.astype(jnp.int32), next_touch,
                          ti=ti, tj=tj, interpret=interpret)
+    if not sizing_reads_only:
+        served = served | (is_write & has_prev)
     dist = jnp.where(served, dist, core_reuse.COLD)
     return core_reuse.DistResult(dist=dist, served=served, touch=touch)
+
+
+def sizing_reduction(addr, is_write, kind: str, grid, *, n_valid=None,
+                     interpret: bool = True, ti: int = 256, tj: int = 512):
+    """``(demand, hit_counts[G])`` for one trace, kernel-backed.
+
+    The kernel analogue of the batched jnp sizing path: the O(N^2)
+    distance channel comes from the Pallas ``count_between`` kernel and
+    the metric reduction is the SAME shared ``core.reuse``
+    ``sizing_from_dists`` code; used when the sizing path runs next to
+    the datapath on TPU. ``kind`` is one of ``core.reuse.SIZING_KINDS``;
+    ``n_valid`` (default: full length) masks a pad tail out of the WSS
+    distinct-count when the caller hands in bucket-padded rows.
+    """
+    if kind not in core_reuse.SIZING_KINDS:
+        raise ValueError(
+            f"kind must be one of {core_reuse.SIZING_KINDS}, got {kind!r}")
+    addr = jnp.asarray(addr, jnp.int32)
+    is_write = jnp.asarray(is_write)
+    grid = jnp.asarray(grid, jnp.int32)
+    if n_valid is None:
+        n_valid = addr.shape[0]
+    policy, reads_only = core_reuse.sizing_policy(kind)
+    r = reuse_distances(addr, is_write, policy, sizing_reads_only=reads_only,
+                        interpret=interpret, ti=ti, tj=tj)
+    return core_reuse.sizing_from_dists(addr, is_write, r, n_valid, grid,
+                                        kind)

@@ -1,0 +1,140 @@
+"""Batched baseline sizing == sequential ``*_ref`` closures, bit for bit.
+
+The one-level baselines' sizing metrics (URD / TRD / WSS / reuse
+intensity) now ride the same vmapped reuse-distance dispatch as ETICA's
+POD sizing. Every value the batched path produces — demands, float64 hit
+curves, and the controller results downstream of them — must equal the
+original per-VM Python closures exactly, including ragged inputs with
+empty, all-write, and single-request VMs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Geometry, SizingMetric, interleave, make_centaur,
+                        make_eci_cache, make_scave, make_vcacheshare,
+                        reuse_intensity_metric, trd_metric, urd_metric,
+                        wss_metric)
+from repro.core import reuse
+from repro.core.controller import _mrc_grid
+from repro.core.trace import Trace
+
+GEO = Geometry(num_sets=8, max_ways=16)
+METRICS = {
+    "urd": urd_metric,
+    "trd": trd_metric,
+    "wss": wss_metric,
+    "reuse_intensity": reuse_intensity_metric,
+}
+FACTORIES = [make_eci_cache, make_centaur, make_scave, make_vcacheshare]
+
+
+def _ragged_requests(seed: int):
+    """Per-VM request lists with awkward shapes: empty, all-write, len-1."""
+    rng = np.random.default_rng(seed)
+    lens = [int(n) for n in rng.integers(0, 200, 6)]
+    lens[1] = 0       # VM with no requests this interval
+    lens[4] = 1       # single request
+    addrs = [rng.integers(0, 48, n).astype(np.int32) for n in lens]
+    writes = [rng.random(n) < 0.4 for n in lens]
+    if lens[3]:
+        writes[3][:] = True   # all-write VM: nothing served under RO/URD
+    return addrs, writes
+
+
+@pytest.mark.parametrize("kind", list(METRICS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_metric_matches_ref_closure(kind, seed):
+    metric: SizingMetric = METRICS[kind](GEO)
+    addrs, writes = _ragged_requests(seed)
+    demands, grid, curves = metric.batch(addrs, writes)
+    assert np.array_equal(grid, metric.grid)
+    for v, (a, w) in enumerate(zip(addrs, writes)):
+        if len(a) == 0:
+            assert demands[v] == 0 and not curves[v].any()
+            continue
+        d_ref, g_ref, c_ref = metric.ref(Trace(a, w))
+        assert int(demands[v]) == int(d_ref), (kind, v)
+        assert np.array_equal(g_ref, grid)
+        # float64 curves must be BIT-identical, not just allclose
+        assert np.array_equal(curves[v], c_ref), (kind, v)
+
+
+def test_all_empty_and_kind_validation():
+    metric = urd_metric(GEO)
+    demands, _, curves = metric.batch([np.empty(0, np.int32)] * 3,
+                                      [np.empty(0, bool)] * 3)
+    assert not demands.any() and not curves.any()
+    with pytest.raises(ValueError):
+        reuse.sizing_metrics_batch([np.arange(4)], [np.zeros(4, bool)],
+                                   "pod", _mrc_grid(GEO))
+
+
+def _mixed_trace(num_vms=3, reqs=2000):
+    from repro.traces import make
+    return interleave(
+        [make(n, reqs, seed=i, addr_offset=i * 10_000_000, scale=0.25)
+         for i, n in enumerate(["hm_1", "usr_0", "web_3"][:num_vms])],
+        seed=0)
+
+
+@pytest.mark.parametrize("factory", FACTORIES,
+                         ids=lambda f: f.__name__)
+def test_controller_batched_equals_sequential(factory):
+    """Every one-level baseline policy: batched == sequential exactly."""
+    trace = _mixed_trace()
+    results, caches = {}, {}
+    for batched in (True, False):
+        cache = factory(120, 3, geometry=GEO, resize_interval=1000,
+                        sim_chunk=500, batched=batched)
+        results[batched] = cache.run(trace)
+        caches[batched] = cache
+    for v in range(3):
+        assert results[True][v].stats == results[False][v].stats, v
+        assert np.array_equal(results[True][v].alloc_history,
+                              results[False][v].alloc_history), v
+    for log_b, log_s in zip(caches[True].logs, caches[False].logs):
+        assert np.array_equal(log_b.demands, log_s.demands)
+        assert np.array_equal(log_b.alloc, log_s.alloc)
+        assert log_b.policies == log_s.policies
+
+
+def test_zero_per_vm_metric_calls_when_batched():
+    """The batched resize path must never invoke the per-VM closure."""
+    trace = _mixed_trace(reqs=1200)
+    calls = {"n": 0}
+
+    def run(batched: bool):
+        cache = make_eci_cache(120, 3, geometry=GEO, resize_interval=600,
+                               sim_chunk=300, batched=batched)
+        ref = cache.metric.ref
+
+        def counting_ref(sub):
+            calls["n"] += 1
+            return ref(sub)
+
+        cache.metric = dataclasses.replace(cache.metric, ref=counting_ref)
+        cache.run(trace)
+
+    run(batched=True)
+    assert calls["n"] == 0
+    run(batched=False)
+    assert calls["n"] > 0
+
+
+def test_plain_closure_metric_still_supported():
+    """Third-party MetricFn closures (no .batch) fall back to the loop."""
+    metric = urd_metric(GEO)
+    from repro.core.controller import (PartitionedSingleLevelCache,
+                                       SingleLevelConfig)
+    from repro.core.baselines import eci_policy
+    trace = _mixed_trace(reqs=1200)
+    results = {}
+    for m in (metric, metric.ref):
+        cfg = SingleLevelConfig(capacity=120, geometry=GEO,
+                                resize_interval=600, sim_chunk=300)
+        cache = PartitionedSingleLevelCache(cfg, 3, m, eci_policy())
+        results[m is metric] = cache.run(trace)
+    for v in range(3):
+        assert results[True][v].stats == results[False][v].stats, v

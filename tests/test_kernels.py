@@ -42,6 +42,30 @@ class TestReuseDistanceKernel:
         np.testing.assert_array_equal(np.asarray(got.dist),
                                       np.asarray(want.dist))
 
+    @pytest.mark.parametrize("kind", ["urd", "trd", "wss", "reuse_intensity"])
+    def test_sizing_reduction_vs_core_engine(self, kind):
+        """Kernel-backed baseline sizing == the batched jnp reduction."""
+        from repro.core import reuse as core_reuse
+        from repro.kernels.reuse_distance.ops import sizing_reduction
+        rng = np.random.default_rng(3)
+        n = 400
+        addr = rng.integers(0, 50, n).astype(np.int32)
+        w = rng.random(n) < 0.4
+        grid = np.arange(0, 321, 20, dtype=np.int64)
+        demands, hits = core_reuse.sizing_metrics_batch([addr], [w], kind,
+                                                        grid)
+        got_d, got_h = sizing_reduction(addr, w, kind, grid)
+        assert int(got_d) == int(demands[0])
+        np.testing.assert_array_equal(np.asarray(got_h, np.int64), hits[0])
+        # bucket-padded row + n_valid must give the same answers (the
+        # padding convention of core_reuse._pad_rows)
+        pad = core_reuse._PAD_BASE + np.arange(112, dtype=np.int32)
+        a_pad = np.concatenate([addr, pad])
+        w_pad = np.concatenate([w, np.ones(112, bool)])
+        pad_d, pad_h = sizing_reduction(a_pad, w_pad, kind, grid, n_valid=n)
+        assert int(pad_d) == int(demands[0])
+        np.testing.assert_array_equal(np.asarray(pad_h, np.int64), hits[0])
+
     @pytest.mark.parametrize("ti,tj", [(64, 128), (128, 256), (256, 512)])
     def test_tile_shapes(self, ti, tj):
         rng = np.random.default_rng(7)

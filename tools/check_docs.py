@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Docs gate (CI): relative links must resolve, verify command must match.
+
+Checks, over README.md and docs/*.md:
+
+  1. every relative markdown link target exists on disk (external URLs
+     and pure #-anchors are skipped);
+  2. the tier-1 verify command quoted in README.md matches ROADMAP.md's
+     **Tier-1 verify:** command (after normalizing the optional
+     ``${PYTHONPATH:+:$PYTHONPATH}`` suffix, which only matters for
+     pre-populated environments).
+
+Stdlib only; exits non-zero with a per-problem report.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _normalize_cmd(cmd: str) -> str:
+    return " ".join(cmd.replace("${PYTHONPATH:+:$PYTHONPATH}", "").split())
+
+
+def _code_commands(text: str) -> set[str]:
+    """Inline code spans plus individual lines of fenced code blocks."""
+    spans = set(re.findall(r"`([^`\n]+)`", text))
+    for block in re.findall(r"```[^\n]*\n(.*?)```", text, re.DOTALL):
+        spans.update(line.strip() for line in block.splitlines())
+    return {s for s in spans if "pytest" in s}
+
+
+def check_links(md: Path) -> list[str]:
+    problems = []
+    for target in LINK_RE.findall(md.read_text()):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target) or target.startswith("#"):
+            continue  # external URL (http:, mailto:, ...) or in-page anchor
+        path = target.split("#", 1)[0]
+        if not (md.parent / path).exists():
+            problems.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return problems
+
+
+def check_verify_command() -> list[str]:
+    roadmap = (ROOT / "ROADMAP.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
+    if not m:
+        return ["ROADMAP.md: no '**Tier-1 verify:** `...`' line found"]
+    want = _normalize_cmd(m.group(1))
+    have = {_normalize_cmd(c) for c in _code_commands(readme)}
+    if want not in have:
+        return [f"README.md: tier-1 verify command not found or != ROADMAP's "
+                f"({want!r}; README has {sorted(have)!r})"]
+    return []
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    problems: list[str] = []
+    for md in docs:
+        if not md.exists():
+            problems.append(f"missing required doc: {md.relative_to(ROOT)}")
+            continue
+        problems.extend(check_links(md))
+    problems.extend(check_verify_command())
+    for p in problems:
+        print(f"FAIL: {p}", file=sys.stderr)
+    if not problems:
+        print(f"docs OK: {len(docs)} files, links resolve, "
+              "verify command matches ROADMAP")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
