@@ -22,6 +22,16 @@ REQS = 8_000
 SCALE = 0.25
 
 
+def aggregate_stats(results) -> dict[str, float]:
+    """Sum per-VM ``VMResult.stats`` dicts — the quantity the
+    batched-vs-sequential and streamed-vs-in-memory gates compare."""
+    agg: dict[str, float] = {}
+    for r in results:
+        for k, v in r.stats.items():
+            agg[k] = agg.get(k, 0.0) + v
+    return agg
+
+
 def row(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)

@@ -7,22 +7,37 @@ controller AND for the one-level baseline chassis (ECI-Cache), whose
 sizing metrics now ride the same batched reuse pipeline. Each
 head-to-head asserts both paths produce *exactly* the same aggregate
 Stats before reporting the wall-clock speedup.
+
+The ``fig15/streaming_*`` rows scale consolidation to 32–128 VMs fed
+from a chunked on-disk :class:`TraceStore` (per-VM demux = one stable
+sort per shard, ``[V, chunk]`` blocks double-buffered host->device):
+wall-clock per request plus peak host RSS, with the full trace never
+resident — one resize window at a time. At the smallest streaming scale
+the streamed run is asserted bit-identical to the in-memory run.
 """
 from __future__ import annotations
 
 import dataclasses
+import resource
+import sys
+import tempfile
+import tracemalloc
+from pathlib import Path
 
 import numpy as np
 
 from repro.core import EticaCache, Trace, make_eci_cache
-from repro.traces import make
+from repro.traces import TraceStore, make, make_store
 
-from .common import GEO, Timer, etica_config, row
+from .common import GEO, Timer, aggregate_stats as _aggregate
+from .common import etica_config, row
 
 PHASES = [1, 2, 4, 8, 16]
 REQS_PER_PHASE = 4_000
 WORKLOADS = ["hm_1", "proj_0", "stg_1", "usr_0", "ts_0", "wdev_0",
              "web_3", "src2_0"] * 2  # 16 consolidated VMs (ECI-Cache scale)
+STREAM_PHASES = [32, 64, 128]        # ECI-Cache-paper consolidation x8
+STREAM_REQS_PER_VM = 750
 
 
 def _phase_trace(vm_traces, phase: int, active: int) -> Trace:
@@ -42,14 +57,6 @@ def _phase_trace(vm_traces, phase: int, active: int) -> Trace:
                     .is_write) for v in range(active)])[order]
     vm = np.concatenate(vm_ids)[order]
     return Trace(addr=addr, is_write=wr, vm=vm)
-
-
-def _aggregate(results) -> dict[str, float]:
-    agg: dict[str, float] = {}
-    for r in results:
-        for k, v in r.stats.items():
-            agg[k] = agg.get(k, 0.0) + v
-    return agg
 
 
 def scaling_ramp(vm_traces) -> None:
@@ -119,6 +126,60 @@ def baseline_batched_vs_sequential(vm_traces, active: int) -> None:
     _head_to_head(build, "eci_batched_speedup", vm_traces, active)
 
 
+def _rss_mb() -> float:
+    # ru_maxrss is KB on Linux but bytes on macOS
+    scale = 2**20 if sys.platform == "darwin" else 1024
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / scale
+
+
+def _store_mb(path: Path) -> float:
+    return sum(f.stat().st_size for f in Path(path).iterdir()) / 2**20
+
+
+def streaming_scaling(tmp: str) -> None:
+    """32–128 consolidated VMs fed from an on-disk TraceStore.
+
+    Each scale generates its mix straight into a store, then drives the
+    batched two-level controller from the store: the full trace stays on
+    disk; host memory holds one resize window + the two in-flight
+    ``[V, chunk]`` blocks. Reported per scale: wall-clock per request,
+    the run's own peak Python-heap use (``tracemalloc``, the host-side
+    trace/window/block allocations — this is the bounded quantity; the
+    full trace would show up here if it were ever materialized) and
+    ``ru_maxrss`` (cumulative process peak, dominated by whatever ran
+    earlier in the process). The smallest scale is cross-checked
+    bit-identically against the in-memory path before any timing is
+    trusted."""
+    for active in STREAM_PHASES:
+        workloads = (WORKLOADS * ((active + len(WORKLOADS) - 1)
+                                  // len(WORKLOADS)))[:active]
+        path = Path(tmp) / f"mix_{active}"
+        store = make_store(path, workloads, STREAM_REQS_PER_VM, scale=0.25,
+                           shard_size=4 * REQS_PER_PHASE)
+        cfg = etica_config("full", dram=200, ssd=400)
+        if active == STREAM_PHASES[0]:
+            ref = EticaCache(cfg, active).run(store.to_trace())
+            agg_ref = _aggregate(ref)
+        # warm-up pass compiles this scale's [V, chunk] executables so the
+        # timed row measures streaming throughput, not one-time JIT
+        EticaCache(cfg, active).run(TraceStore.open(path))
+        cache = EticaCache(cfg, active)
+        tracemalloc.start()
+        with Timer() as t:
+            res = cache.run(TraceStore.open(path))
+        _, peak_py = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        if active == STREAM_PHASES[0]:
+            assert _aggregate(res) == agg_ref, (
+                f"streamed and in-memory paths diverged at {active} VMs")
+        hits = np.mean([r.hit_ratio for r in res])
+        row(f"fig15/streaming_{active}vms",
+            t.us / (active * STREAM_REQS_PER_VM),
+            f"avg_hit={hits:.3f} peak_py_mb={peak_py / 2**20:.1f} "
+            f"peak_rss_mb={_rss_mb():.0f} store_mb={_store_mb(path):.2f} "
+            f"stats_equal={'True' if active == STREAM_PHASES[0] else 'n/a'}")
+
+
 def main():
     num_vms = max(PHASES)
     vm_traces = [make(w, REQS_PER_PHASE * len(PHASES), seed=i,
@@ -127,6 +188,8 @@ def main():
     scaling_ramp(vm_traces)
     batched_vs_sequential(vm_traces, max(PHASES))
     baseline_batched_vs_sequential(vm_traces, max(PHASES))
+    with tempfile.TemporaryDirectory() as tmp:
+        streaming_scaling(tmp)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ MODULES = [
     "fig17_intervals",
     "serving_two_tier",
     "kernels_bench",
+    "trace_streaming",
 ]
 
 

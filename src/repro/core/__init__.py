@@ -15,7 +15,7 @@ Layering (bottom-up):
   * :mod:`~repro.core.baselines` — ECI-Cache, Centaur, S-CAVE, vCacheShare.
 """
 from .policies import LEVEL_LATENCY, Level, Policy, T_DRAM, T_HDD, T_SSD
-from .trace import Trace, interleave
+from .trace import Trace, interleave, pad_batch, split_by_vm
 from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes, mrc, pod,
                     pod_distances, trd, trd_distances, urd, urd_distances)
 from .popularity import PopularityTracker, block_scores, contributions
@@ -27,8 +27,8 @@ from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
                         simulate_two_level, simulate_two_level_batch,
                         stack_states, unstack_states)
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
-                         PartitionedSingleLevelCache, SingleLevelConfig,
-                         VMResult)
+                         PartitionedSingleLevelCache, PolicyChooser,
+                         SingleLevelConfig, VMResult)
 from .baselines import (SizingMetric, make_centaur, make_eci_cache,
                         make_scave, make_vcacheshare, reuse_intensity_metric,
                         reuse_intensity_metric_ref, trd_metric,
@@ -37,7 +37,7 @@ from .baselines import (SizingMetric, make_centaur, make_eci_cache,
 
 __all__ = [
     "LEVEL_LATENCY", "Level", "Policy", "T_DRAM", "T_HDD", "T_SSD",
-    "Trace", "interleave",
+    "Trace", "interleave", "pad_batch", "split_by_vm",
     "DistResult", "demand_blocks", "hit_counts_at_sizes", "mrc", "pod",
     "pod_distances", "trd", "trd_distances", "urd", "urd_distances",
     "PopularityTracker", "block_scores", "contributions",
@@ -49,7 +49,8 @@ __all__ = [
     "simulate_two_level", "simulate_two_level_batch",
     "stack_states", "unstack_states",
     "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
-    "PartitionedSingleLevelCache", "SingleLevelConfig", "VMResult",
+    "PartitionedSingleLevelCache", "PolicyChooser", "SingleLevelConfig",
+    "VMResult",
     "SizingMetric", "make_centaur", "make_eci_cache", "make_scave",
     "make_vcacheshare", "reuse_intensity_metric",
     "reuse_intensity_metric_ref", "trd_metric", "trd_metric_ref",

@@ -48,7 +48,7 @@ import numpy as np
 
 from . import reuse
 from .controller import (Geometry, MetricFn, PartitionedSingleLevelCache,
-                         SingleLevelConfig, _mrc_grid)
+                         PolicyChooser, SingleLevelConfig, _mrc_grid)
 from .policies import Policy
 from .trace import Trace
 
@@ -128,16 +128,22 @@ class SizingMetric:
     grid: np.ndarray = dataclasses.field(compare=False)
     ref: MetricFn = dataclasses.field(compare=False)  # sequential oracle
 
-    def batch(self, addrs: list[np.ndarray], writes: list[np.ndarray]):
+    def batch(self, addrs: list[np.ndarray], writes: list[np.ndarray],
+              with_reads: bool = False):
         """(demands [V], grid [G], curves [V, G]) for all VMs at once.
 
         Rows for empty traces are zero — exactly what the sequential loop
-        produces by skipping them.
+        produces by skipping them. With ``with_reads`` the per-VM read
+        counts (already reduced inside the same dispatch, for the dynamic
+        write-policy choosers) are appended to the return.
         """
-        demands, hits = reuse.sizing_metrics_batch(
+        demands, hits, reads = reuse.sizing_metrics_batch(
             addrs, writes, self.kind, self.grid)
         ns = np.array([max(np.shape(a)[0], 1) for a in addrs], np.float64)
-        return demands, self.grid, hits.astype(np.float64) / ns[:, None]
+        curves = hits.astype(np.float64) / ns[:, None]
+        if with_reads:
+            return demands, self.grid, curves, reads
+        return demands, self.grid, curves
 
 
 def _sizing_metric(kind: str, geom: Geometry, points: int,
@@ -170,14 +176,22 @@ def reuse_intensity_metric(geom: Geometry, points: int = 17) -> SizingMetric:
 # policy choosers
 # ---------------------------------------------------------------------------
 
-def eci_policy(read_heavy_threshold: float = 0.8):
+def eci_policy(read_heavy_threshold: float = 0.8) -> PolicyChooser:
     """ECI-Cache dynamically assigns RO to read-dominated VMs (endurance)
-    and WB otherwise (performance)."""
+    and WB otherwise (performance).
+
+    Returned as a :class:`~repro.core.controller.PolicyChooser`: with a
+    batched :class:`SizingMetric` the per-VM read ratios come out of the
+    same vmapped sizing dispatch (zero per-VM host work); the host-loop
+    closure stays as the ``ref`` oracle the sequential path runs."""
+    def from_ratio(read_ratio: float) -> Policy:
+        return (Policy.RO if read_ratio >= read_heavy_threshold
+                else Policy.WB)
+
     def chooser(sub: Trace) -> Policy:
-        n = max(len(sub), 1)
-        read_ratio = sub.n_reads / n
-        return Policy.RO if read_ratio >= read_heavy_threshold else Policy.WB
-    return chooser
+        return from_ratio(sub.n_reads / max(len(sub), 1))
+
+    return PolicyChooser(from_read_ratio=from_ratio, ref=chooser)
 
 
 def fixed_policy(p: Policy):

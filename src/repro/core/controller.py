@@ -42,6 +42,16 @@ from .simulator import (CacheState, Stats, capacity_to_ways, make_cache,
 from .trace import Trace
 
 
+def _window_source(trace, num_vms: int, window: int, chunk: int,
+                   prefetch: bool):
+    """Normalize ``run``'s input (Trace | TraceStore |
+    StreamingTraceSource) into a resize-window iterator. Imported lazily
+    so ``repro.core`` does not depend on ``repro.traces`` at import
+    time."""
+    from repro.traces.stream import window_source
+    return window_source(trace, num_vms, window, chunk, prefetch)
+
+
 @dataclasses.dataclass
 class Geometry:
     num_sets: int = 64
@@ -111,21 +121,6 @@ def _pad(addr: np.ndarray, is_write: np.ndarray, n: int):
             np.concatenate([is_write, np.zeros(k, bool)]))
 
 
-def _pad_batch(chunks: list[Trace | None], n: int):
-    """Stack per-VM windows into rectangular [V, n] arrays, padding ragged
-    tails (and VMs with no window) with addr = -1 no-ops."""
-    v = len(chunks)
-    addr = np.full((v, n), -1, np.int32)
-    is_write = np.zeros((v, n), bool)
-    for i, c in enumerate(chunks):
-        if c is None or len(c) == 0:
-            continue
-        k = min(len(c), n)
-        addr[i, :k] = np.asarray(c.addr, np.int32)[:k]
-        is_write[i, :k] = np.asarray(c.is_write)[:k]
-    return addr, is_write
-
-
 def _vm_slice(state: CacheState, v: int) -> CacheState:
     """View VM ``v``'s cache out of a stacked [V, S, W] state."""
     return jax.tree_util.tree_map(lambda x: x[v], state)
@@ -180,6 +175,7 @@ class EticaConfig:
     mode: str = "full"               # "full" | "npe"
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
+    prefetch: bool = True            # double-buffer host->device blocks
 
 
 class EticaCache:
@@ -366,10 +362,14 @@ class EticaCache:
                         self.stats[v].get("disk_reads", 0.0) + int(n[v]))
 
     # -- datapath ----------------------------------------------------------
-    def _run_chunk_batched(self, chunks: list[Trace | None]) -> None:
-        """One vmapped dispatch simulates this window for every VM."""
+    def _run_chunk_batched(self, a, w, chunks: list[Trace | None]) -> None:
+        """One vmapped dispatch simulates this window for every VM.
+
+        ``a``/``w`` are the rectangular ``[V, chunk]`` request block (host
+        numpy or already-transferred device arrays from the streaming
+        prefetcher); ``chunks`` the ragged per-VM views for stats
+        attribution."""
         cfg = self.cfg
-        a, w = _pad_batch(chunks, cfg.promo_interval)
         self.dram, self.ssd, st, t_end = simulator.simulate_two_level_batch(
             a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
             mode=cfg.mode, t0=self.t)
@@ -396,13 +396,22 @@ class EticaCache:
             _acc(self.stats[v], st)
 
     # -- main loop ----------------------------------------------------------
-    def run(self, trace: Trace) -> list[VMResult]:
+    def run(self, trace) -> list[VMResult]:
+        """Drive the controller over a whole trace.
+
+        ``trace`` may be an in-memory :class:`Trace`, an on-disk
+        :class:`repro.traces.store.TraceStore`, or a pre-built
+        :class:`repro.traces.stream.StreamingTraceSource` — all three
+        produce bit-identical results; the store/stream paths never hold
+        more than one resize window (plus the in-flight ``[V, chunk]``
+        blocks) in host memory."""
         cfg = self.cfg
         gd, gs = cfg.geometry_dram, cfg.geometry_ssd
         alloc_hist = [[] for _ in range(self.num_vms)]
-        for window in trace.intervals(cfg.resize_interval):
-            subs = [window.for_vm(v) if window.vm is not None else window
-                    for v in range(self.num_vms)]
+        source = _window_source(trace, self.num_vms, cfg.resize_interval,
+                                cfg.promo_interval, cfg.prefetch)
+        for win in source.windows():
+            subs = win.subs
             # 1) POD sizing + PPC partitioning at both levels (§4.3)
             alloc_d, dem_d, _ = self._size_level(
                 subs, Policy.RO, cfg.geometry_dram, cfg.dram_capacity)
@@ -435,15 +444,17 @@ class EticaCache:
                 alloc_hist[v].append(int(alloc_d[v] + alloc_s[v]))
             self.ways_dram, self.ways_ssd = wd, ws
             # 3) datapath simulation in promo-interval chunks + maintenance
-            chunk_lists = [list(sub.intervals(cfg.promo_interval))
-                           for sub in subs]
-            for k in range(max(map(len, chunk_lists), default=0)):
-                kth = [c[k] if k < len(c) else None for c in chunk_lists]
-                if cfg.batched:
-                    self._run_chunk_batched(kth)
+            if cfg.batched:
+                # [V, chunk] blocks from the source (device-put one block
+                # ahead of the simulator when prefetch is on)
+                for a, w, kth in win.blocks():
+                    self._run_chunk_batched(a, w, kth)
                     if cfg.mode == "full":
                         self._maintain_all(kth)
-                else:
+            else:
+                chunk_lists = win.chunk_lists()
+                for k in range(max(map(len, chunk_lists), default=0)):
+                    kth = [c[k] if k < len(c) else None for c in chunk_lists]
                     self._run_chunk_sequential(kth)
                     if cfg.mode == "full":
                         for v, chunk in enumerate(kth):
@@ -466,11 +477,43 @@ class SingleLevelConfig:
     sim_chunk: int = 1_000
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
+    prefetch: bool = True            # double-buffer host->device blocks
 
 
 MetricFn = Callable[[Trace], tuple[int, np.ndarray, np.ndarray]]
 # returns (demand_blocks, grid_sizes, hit_curve)
 PolicyFn = Callable[[Trace], Policy]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyChooser:
+    """A per-VM write-policy chooser in batched and sequential forms.
+
+    ECI-Cache picks each VM's policy from its read ratio every resize
+    interval. With a batched :class:`~repro.core.baselines.SizingMetric`
+    the per-VM read counts already ride the vmapped sizing dispatch
+    (``reuse.sizing_metrics_batch``), so :meth:`batch` turns those counts
+    into policies with zero extra per-VM work; ``ref`` is the original
+    host-loop closure kept as the sequential oracle
+    (``batched=False``). Instances are themselves callable as a plain
+    :data:`PolicyFn`.
+    """
+
+    from_read_ratio: Callable[[float], Policy]
+    ref: PolicyFn                     # sequential per-VM oracle
+
+    def __call__(self, sub: Trace) -> Policy:
+        return self.ref(sub)
+
+    def batch(self, read_counts, lens) -> list[Policy]:
+        """Policies for all VMs from the sizing dispatch's read counts.
+
+        Bit-identical to calling ``ref`` per VM: the ratio is the same
+        integer division, and empty VMs keep the chassis' ``Policy.WB``
+        default."""
+        return [self.from_read_ratio(int(r) / max(int(n), 1))
+                if n else Policy.WB
+                for r, n in zip(read_counts, lens)]
 
 
 class PartitionedSingleLevelCache:
@@ -513,23 +556,31 @@ class PartitionedSingleLevelCache:
     def vm_cache(self, v: int) -> CacheState:
         return _vm_slice(self.caches, v) if self.cfg.batched else self.caches[v]
 
-    def run(self, trace: Trace) -> list[VMResult]:
+    def run(self, trace) -> list[VMResult]:
+        """Drive the chassis over a :class:`Trace`, an on-disk
+        :class:`repro.traces.store.TraceStore`, or a pre-built
+        :class:`repro.traces.stream.StreamingTraceSource` — bit-identical
+        results either way (the streamed paths hold one resize window at
+        a time)."""
         cfg = self.cfg
         alloc_hist = [[] for _ in range(self.num_vms)]
-        for window in trace.intervals(cfg.resize_interval):
-            subs = [window.for_vm(v) if window.vm is not None else window
-                    for v in range(self.num_vms)]
+        source = _window_source(trace, self.num_vms, cfg.resize_interval,
+                                cfg.sim_chunk, cfg.prefetch)
+        for win in source.windows():
+            subs = win.subs
             demands = np.zeros(self.num_vms, np.int64)
             grid = _mrc_grid(cfg.geometry, cfg.mrc_points)
             curves = np.zeros((self.num_vms, grid.size))
-            policies = [self.policy_fn(sub) if len(sub) else Policy.WB
-                        for sub in subs]
-            if cfg.batched and hasattr(self.metric, "batch"):
+            batched_metric = cfg.batched and hasattr(self.metric, "batch")
+            if batched_metric:
                 # all VMs' metrics in ONE vmapped reduction over the
-                # stacked reuse-distance histograms (empty rows stay 0)
-                dem, g_, cur = self.metric.batch(
+                # stacked reuse-distance histograms (empty rows stay 0);
+                # the dynamic policy choosers' read counts ride the same
+                # dispatch
+                dem, g_, cur, reads = self.metric.batch(
                     [np.asarray(s.addr) for s in subs],
-                    [np.asarray(s.is_write) for s in subs])
+                    [np.asarray(s.is_write) for s in subs],
+                    with_reads=True)
                 same_grid = np.array_equal(g_, grid)
                 for v, sub in enumerate(subs):
                     if len(sub) == 0:
@@ -545,6 +596,12 @@ class PartitionedSingleLevelCache:
                     d, g_, c_ = metric_fn(sub)
                     demands[v] = min(d, cfg.geometry.capacity)
                     curves[v] = np.interp(grid, g_, c_)
+            if batched_metric and isinstance(self.policy_fn, PolicyChooser):
+                policies = self.policy_fn.batch(reads,
+                                                [len(s) for s in subs])
+            else:
+                policies = [self.policy_fn(sub) if len(sub) else Policy.WB
+                            for sub in subs]
             res = _partition(demands, curves, grid, cfg.capacity)
             counts = np.array([len(s) for s in subs], np.float64)
             alloc = _expand_to_capacity(res.alloc, counts, cfg.capacity,
@@ -570,12 +627,11 @@ class PartitionedSingleLevelCache:
             for v in range(self.num_vms):
                 alloc_hist[v].append(int(alloc[v]))
             self.ways = w_new
-            chunk_lists = [list(sub.intervals(cfg.sim_chunk)) for sub in subs]
             flags = policy_flags(policies)
-            for k in range(max(map(len, chunk_lists), default=0)):
-                kth = [c[k] if k < len(c) else None for c in chunk_lists]
-                if cfg.batched:
-                    a, wr = _pad_batch(kth, cfg.sim_chunk)
+            if cfg.batched:
+                # [V, chunk] blocks from the source (device-put one block
+                # ahead of the simulator when prefetch is on)
+                for a, wr, kth in win.blocks():
                     self.caches, st, t_end = \
                         simulator.simulate_single_level_batch(
                             a, wr, self.caches, self.ways, flags, t0=self.t)
@@ -584,7 +640,10 @@ class PartitionedSingleLevelCache:
                     for v, chunk in enumerate(kth):
                         if chunk is not None:
                             _acc(self.stats[v], Stats(*[f[v] for f in st]))
-                else:
+            else:
+                chunk_lists = win.chunk_lists()
+                for k in range(max(map(len, chunk_lists), default=0)):
+                    kth = [c[k] if k < len(c) else None for c in chunk_lists]
                     for v, chunk in enumerate(kth):
                         if chunk is None:
                             continue

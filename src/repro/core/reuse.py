@@ -392,6 +392,20 @@ SIZING_KINDS = ("urd", "trd", "wss", "reuse_intensity")
 _SERVED_BIG = jnp.int32(2**30)  # not-served sentinel for hit counting
 
 
+def read_count(is_write, n_valid=None) -> jax.Array:
+    """#reads among the first ``n_valid`` requests (int32).
+
+    The per-VM read-ratio the ECI-style dynamic write-policy choosers
+    consume, computed inside the same batched sizing dispatch instead of
+    a host loop. ``n_valid=None`` counts the whole row — exact for
+    bucket-padded rows too, whose pads are all writes."""
+    is_read = ~is_write
+    if n_valid is not None:
+        is_read = is_read & (jnp.arange(is_write.shape[0],
+                                        dtype=jnp.int32) < n_valid)
+    return jnp.sum(is_read, dtype=jnp.int32)
+
+
 def sizing_policy(kind: str) -> tuple[Policy, bool]:
     """The (policy, sizing_reads_only) decomposition a sizing kind rides."""
     if kind == "reuse_intensity":
@@ -431,12 +445,14 @@ def sizing_from_dists(addr, is_write, r: DistResult, n_valid, grid,
 
 
 def _sizing_one(addr, is_write, n_valid, grid, kind: str, chunk: int):
-    """``(demand, hit_counts[G])`` for one (possibly padded) trace: one
-    O(N^2) :func:`_decompose` pass + the shared reduction."""
+    """``(demand, hit_counts[G], n_reads)`` for one (possibly padded)
+    trace: one O(N^2) :func:`_decompose` pass + the shared reduction, with
+    the policy choosers' read count riding the same dispatch."""
     policy, reads_only = sizing_policy(kind)
     r = _decompose(addr, is_write, policy,
                    sizing_reads_only=reads_only, chunk=chunk)
-    return sizing_from_dists(addr, is_write, r, n_valid, grid, kind)
+    demand, hits = sizing_from_dists(addr, is_write, r, n_valid, grid, kind)
+    return demand, hits, read_count(is_write, n_valid)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "chunk"))
@@ -447,7 +463,8 @@ def _sizing_reduce_vmapped(amat, wmat, nvec, grid, kind, chunk):
 
 
 def sizing_metrics_batch(addrs, writes, kind: str, grid,
-                         chunk: int = 256) -> tuple[np.ndarray, np.ndarray]:
+                         chunk: int = 256
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Evaluate one sizing metric for many VM sub-traces in ONE dispatch.
 
     Args:
@@ -456,13 +473,15 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid,
       grid: ascending candidate cache sizes (blocks) for the hit curve.
 
     Returns:
-      ``(demands, hit_counts)``: int64 ``[V]`` demanded blocks and int64
-      ``[V, G]`` served-access hit counts at each grid size (zero rows for
-      empty traces). Per-VM values are bit-identical to evaluating the
-      sequential per-VM closures in :mod:`repro.core.baselines` — the
-      padding is the same never-reused trailing writes as
-      :func:`_pad_trace`, which no real distance window can see, and the
-      WSS distinct-count masks the pad tail explicitly.
+      ``(demands, hit_counts, read_counts)``: int64 ``[V]`` demanded
+      blocks, int64 ``[V, G]`` served-access hit counts at each grid size,
+      and int64 ``[V]`` per-VM read counts (for the dynamic write-policy
+      choosers) — zero rows for empty traces. Per-VM values are
+      bit-identical to evaluating the sequential per-VM closures in
+      :mod:`repro.core.baselines` — the padding is the same never-reused
+      trailing writes as :func:`_pad_trace`, which no real distance window
+      can see, and the WSS distinct-count and read count mask the pad tail
+      explicitly.
     """
     if kind not in SIZING_KINDS:
         raise ValueError(f"kind must be one of {SIZING_KINDS}, got {kind!r}")
@@ -470,13 +489,15 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid,
     grid = np.asarray(grid, np.int32)
     demands = np.zeros(len(lens), np.int64)
     hits = np.zeros((len(lens), grid.size), np.int64)
+    reads = np.zeros(len(lens), np.int64)
     live = [v for v, n in enumerate(lens) if n > 0]
     if not live:
-        return demands, hits
+        return demands, hits, reads
     amat, wmat = _pad_rows(addrs, writes, live, lens)
     nvec = np.array([lens[v] for v in live], np.int32)
-    d, h = _sizing_reduce_vmapped(amat, wmat, nvec, jnp.asarray(grid),
-                                  kind=kind, chunk=chunk)
+    d, h, r = _sizing_reduce_vmapped(amat, wmat, nvec, jnp.asarray(grid),
+                                     kind=kind, chunk=chunk)
     demands[live] = np.asarray(d, np.int64)
     hits[live] = np.asarray(h, np.int64)
-    return demands, hits
+    reads[live] = np.asarray(r, np.int64)
+    return demands, hits, reads

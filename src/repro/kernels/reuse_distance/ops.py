@@ -79,6 +79,7 @@ def reuse_distances(addr, is_write, policy: Policy, *,
 
 
 def sizing_reduction(addr, is_write, kind: str, grid, *, n_valid=None,
+                     with_reads: bool = False,
                      interpret: bool = True, ti: int = 256, tj: int = 512):
     """``(demand, hit_counts[G])`` for one trace, kernel-backed.
 
@@ -88,7 +89,10 @@ def sizing_reduction(addr, is_write, kind: str, grid, *, n_valid=None,
     ``sizing_from_dists`` code; used when the sizing path runs next to
     the datapath on TPU. ``kind`` is one of ``core.reuse.SIZING_KINDS``;
     ``n_valid`` (default: full length) masks a pad tail out of the WSS
-    distinct-count when the caller hands in bucket-padded rows.
+    distinct-count when the caller hands in bucket-padded rows. With
+    ``with_reads`` the per-VM read count (the dynamic write-policy
+    choosers' input, ``core.reuse.read_count``) is appended, mirroring
+    ``sizing_metrics_batch``.
     """
     if kind not in core_reuse.SIZING_KINDS:
         raise ValueError(
@@ -101,5 +105,8 @@ def sizing_reduction(addr, is_write, kind: str, grid, *, n_valid=None,
     policy, reads_only = core_reuse.sizing_policy(kind)
     r = reuse_distances(addr, is_write, policy, sizing_reads_only=reads_only,
                         interpret=interpret, ti=ti, tj=tj)
-    return core_reuse.sizing_from_dists(addr, is_write, r, n_valid, grid,
-                                        kind)
+    demand, hits = core_reuse.sizing_from_dists(addr, is_write, r, n_valid,
+                                                grid, kind)
+    if with_reads:
+        return demand, hits, core_reuse.read_count(is_write, n_valid)
+    return demand, hits

@@ -1,3 +1,11 @@
-from .generators import SPECS, WorkloadSpec, generate, make, names
+from .generators import (SPECS, WorkloadSpec, generate, generate_to_store,
+                         make, make_store, names)
+from .store import TraceStore, parse_blktrace, parse_msr_csv
+from .stream import StreamingTraceSource, StreamWindow, window_source
 
-__all__ = ["SPECS", "WorkloadSpec", "generate", "make", "names"]
+__all__ = [
+    "SPECS", "WorkloadSpec", "generate", "generate_to_store", "make",
+    "make_store", "names",
+    "TraceStore", "parse_blktrace", "parse_msr_csv",
+    "StreamingTraceSource", "StreamWindow", "window_source",
+]

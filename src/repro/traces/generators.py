@@ -175,3 +175,39 @@ def make(name: str, n: int, seed: int = 0, addr_offset: int = 0,
 
 def names() -> list[str]:
     return list(SPECS)
+
+
+# -- generate-to-store ------------------------------------------------------
+
+def generate_to_store(path, spec: WorkloadSpec, n: int, seed: int = 0,
+                      addr_offset: int = 0, shard_size: int | None = None):
+    """Generate one workload straight into an on-disk
+    :class:`~repro.traces.store.TraceStore` (vm-less single stream).
+
+    The synthetic generator itself is in-memory (its permutations are
+    global), but the store is written shard-by-shard, so the result can
+    be consumed at bounded memory like any imported trace."""
+    from .store import DEFAULT_SHARD_SIZE, TraceStore
+    trace = generate(spec, n, seed=seed, addr_offset=addr_offset)
+    return TraceStore.from_trace(path, trace,
+                                 shard_size=shard_size or DEFAULT_SHARD_SIZE)
+
+
+def make_store(path, workloads: list[str], reqs_per_vm: int, seed: int = 0,
+               scale: float = 1.0, addr_stride: int = 10_000_000,
+               interleave_seed: int = 42, shard_size: int | None = None):
+    """Generate a consolidated multi-VM mix straight into a TraceStore.
+
+    One named workload per VM (``workloads[i]`` drives VM ``i``, disjoint
+    address spaces via ``addr_stride``), randomly interleaved into one
+    hypervisor arrival stream — the same recipe the benchmarks use
+    in-memory, persisted shard-by-shard for the streaming ingestion
+    path."""
+    from .store import DEFAULT_SHARD_SIZE, TraceStore
+    from repro.core.trace import interleave
+    traces = [make(w, reqs_per_vm, seed=seed + i, addr_offset=i * addr_stride,
+                   scale=scale)
+              for i, w in enumerate(workloads)]
+    mixed = interleave(traces, seed=interleave_seed)
+    return TraceStore.from_trace(path, mixed,
+                                 shard_size=shard_size or DEFAULT_SHARD_SIZE)

@@ -52,19 +52,22 @@ class TestReuseDistanceKernel:
         addr = rng.integers(0, 50, n).astype(np.int32)
         w = rng.random(n) < 0.4
         grid = np.arange(0, 321, 20, dtype=np.int64)
-        demands, hits = core_reuse.sizing_metrics_batch([addr], [w], kind,
-                                                        grid)
+        demands, hits, reads = core_reuse.sizing_metrics_batch([addr], [w],
+                                                               kind, grid)
         got_d, got_h = sizing_reduction(addr, w, kind, grid)
         assert int(got_d) == int(demands[0])
         np.testing.assert_array_equal(np.asarray(got_h, np.int64), hits[0])
+        assert int(reads[0]) == int(np.sum(~w))
         # bucket-padded row + n_valid must give the same answers (the
         # padding convention of core_reuse._pad_rows)
         pad = core_reuse._PAD_BASE + np.arange(112, dtype=np.int32)
         a_pad = np.concatenate([addr, pad])
         w_pad = np.concatenate([w, np.ones(112, bool)])
-        pad_d, pad_h = sizing_reduction(a_pad, w_pad, kind, grid, n_valid=n)
+        pad_d, pad_h, pad_r = sizing_reduction(a_pad, w_pad, kind, grid,
+                                               n_valid=n, with_reads=True)
         assert int(pad_d) == int(demands[0])
         np.testing.assert_array_equal(np.asarray(pad_h, np.int64), hits[0])
+        assert int(pad_r) == int(reads[0])
 
     @pytest.mark.parametrize("ti,tj", [(64, 128), (128, 256), (256, 512)])
     def test_tile_shapes(self, ti, tj):

@@ -8,7 +8,12 @@ Checks, over README.md and docs/*.md:
   2. the tier-1 verify command quoted in README.md matches ROADMAP.md's
      **Tier-1 verify:** command (after normalizing the optional
      ``${PYTHONPATH:+:$PYTHONPATH}`` suffix, which only matters for
-     pre-populated environments).
+     pre-populated environments);
+  3. the streaming-layer docs stay wired up: README documents the
+     trace-import CLI (``python -m repro.traces.store import``) for a
+     module that actually exists, and docs/architecture.md links both
+     streaming modules (``traces/store.py`` and ``traces/stream.py``),
+     so the link check in (1) keeps validating them.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -26,12 +31,16 @@ def _normalize_cmd(cmd: str) -> str:
     return " ".join(cmd.replace("${PYTHONPATH:+:$PYTHONPATH}", "").split())
 
 
-def _code_commands(text: str) -> set[str]:
+def _code_lines(text: str) -> set[str]:
     """Inline code spans plus individual lines of fenced code blocks."""
     spans = set(re.findall(r"`([^`\n]+)`", text))
     for block in re.findall(r"```[^\n]*\n(.*?)```", text, re.DOTALL):
         spans.update(line.strip() for line in block.splitlines())
-    return {s for s in spans if "pytest" in s}
+    return spans
+
+
+def _code_commands(text: str) -> set[str]:
+    return {s for s in _code_lines(text) if "pytest" in s}
 
 
 def check_links(md: Path) -> list[str]:
@@ -59,6 +68,28 @@ def check_verify_command() -> list[str]:
     return []
 
 
+def check_streaming_docs() -> list[str]:
+    problems = []
+    cli_module = ROOT / "src/repro/traces/store.py"
+    readme = (ROOT / "README.md").read_text()
+    cli_cmds = [c for c in _code_lines(readme)
+                if re.search(r"python -m repro\.traces\.store\s+import", c)]
+    if not cli_cmds:
+        problems.append("README.md: no 'python -m repro.traces.store import'"
+                        " command documented (external-traces section)")
+    elif not cli_module.exists():
+        problems.append("README.md documents the trace-import CLI but "
+                        "src/repro/traces/store.py does not exist")
+    arch = (ROOT / "docs" / "architecture.md")
+    if arch.exists():
+        targets = set(LINK_RE.findall(arch.read_text()))
+        for mod in ("traces/store.py", "traces/stream.py"):
+            if not any(t.endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: streaming module "
+                                f"{mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -68,6 +99,7 @@ def main() -> int:
             continue
         problems.extend(check_links(md))
     problems.extend(check_verify_command())
+    problems.extend(check_streaming_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
