@@ -6,7 +6,11 @@ batched-datapath head-to-heads: one vmapped dispatch for all VMs
 controller AND for the one-level baseline chassis (ECI-Cache), whose
 sizing metrics now ride the same batched reuse pipeline. Each
 head-to-head asserts both paths produce *exactly* the same aggregate
-Stats before reporting the wall-clock speedup.
+Stats before reporting the wall-clock speedup. The batched ETICA run
+uses the DEFAULT fused maintenance (device popularity table + Pallas
+promote/evict kernels through the CPU interpreter), so the equality
+assert is also the gate that fused maintenance stays bit-identical to
+the sequential per-VM numpy oracle end to end.
 
 The ``fig15/streaming_*`` rows scale consolidation to 32–128 VMs fed
 from a chunked on-disk :class:`TraceStore` (per-VM demux = one stable
@@ -103,7 +107,11 @@ def _head_to_head(build, label: str, vm_traces, active: int) -> None:
 
 
 def batched_vs_sequential(vm_traces, active: int) -> None:
-    """Head-to-head at ``active`` VMs: identical results, fewer dispatches."""
+    """Head-to-head at ``active`` VMs: identical results, fewer
+    dispatches. ``batched=True`` runs the fused maintenance dispatch
+    (Pallas kernels, interpret mode on CPU) — the Stats equality assert
+    inside :func:`_head_to_head` is the fused-vs-sequential-oracle
+    bit-identity gate."""
 
     def build(batched: bool) -> EticaCache:
         cfg = dataclasses.replace(etica_config("full", dram=200, ssd=400),

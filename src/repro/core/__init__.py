@@ -18,14 +18,18 @@ from .policies import LEVEL_LATENCY, Level, Policy, T_DRAM, T_HDD, T_SSD
 from .trace import Trace, interleave, pad_batch, split_by_vm
 from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes, mrc, pod,
                     pod_distances, trd, trd_distances, urd, urd_distances)
-from .popularity import PopularityTracker, block_scores, contributions
+from .popularity import (PopularityTable, PopularityTracker, block_scores,
+                         contributions, table_init, table_least_popular,
+                         table_len, table_scores, table_top_known,
+                         table_update)
 from .partition import PartitionResult, partition
 from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
                         evict_blocks, make_cache, make_cache_batch,
                         policy_flags, promote_blocks, resize, resize_batch,
-                        simulate_single_level, simulate_single_level_batch,
-                        simulate_two_level, simulate_two_level_batch,
-                        stack_states, unstack_states)
+                        resize_levels, simulate_single_level,
+                        simulate_single_level_batch, simulate_two_level,
+                        simulate_two_level_batch, stack_states,
+                        unstack_states)
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
                          PartitionedSingleLevelCache, PolicyChooser,
                          SingleLevelConfig, VMResult)
@@ -40,11 +44,13 @@ __all__ = [
     "Trace", "interleave", "pad_batch", "split_by_vm",
     "DistResult", "demand_blocks", "hit_counts_at_sizes", "mrc", "pod",
     "pod_distances", "trd", "trd_distances", "urd", "urd_distances",
-    "PopularityTracker", "block_scores", "contributions",
+    "PopularityTable", "PopularityTracker", "block_scores", "contributions",
+    "table_init", "table_least_popular", "table_len", "table_scores",
+    "table_top_known", "table_update",
     "PartitionResult", "partition",
     "CacheState", "PolicyFlags", "Stats", "capacity_to_ways",
     "evict_blocks", "make_cache", "make_cache_batch", "policy_flags",
-    "promote_blocks", "resize", "resize_batch",
+    "promote_blocks", "resize", "resize_batch", "resize_levels",
     "simulate_single_level", "simulate_single_level_batch",
     "simulate_two_level", "simulate_two_level_batch",
     "stack_states", "unstack_states",

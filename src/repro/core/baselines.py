@@ -111,6 +111,22 @@ def reuse_intensity_metric_ref(geom: Geometry, points: int = 17) -> MetricFn:
 # batched metric protocol: all VMs sized in one vmapped dispatch
 # ---------------------------------------------------------------------------
 
+def _use_kernel_sizing() -> bool:
+    """Route batched sizing through the Pallas ``sizing_reduction`` path.
+
+    Default: only where Pallas compiles natively (TPU). Override with
+    ``ETICA_SIZING_KERNEL=1`` (forces the kernel path — through the
+    interpreter on CPU, which is how CI parity-checks it) or ``=0``
+    (forces the jnp fallback everywhere).
+    """
+    from repro.kernels import env_flag
+    forced = env_flag("ETICA_SIZING_KERNEL")
+    if forced is not None:
+        return forced
+    import jax
+    return jax.default_backend() == "tpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class SizingMetric:
     """A baseline sizing metric in both batched and sequential forms.
@@ -136,9 +152,22 @@ class SizingMetric:
         produces by skipping them. With ``with_reads`` the per-VM read
         counts (already reduced inside the same dispatch, for the dynamic
         write-policy choosers) are appended to the return.
+
+        On backends that compile Pallas (TPU; forced anywhere by
+        ``ETICA_SIZING_KERNEL=1``) the O(N^2) distance channel runs
+        through the ``kernels/reuse_distance`` Pallas kernel; the pure
+        jnp reduction stays the CPU fallback, parity-asserted in
+        ``tests/test_kernels.py``.
         """
-        demands, hits, reads = reuse.sizing_metrics_batch(
-            addrs, writes, self.kind, self.grid)
+        if _use_kernel_sizing():
+            from repro.kernels import use_interpret
+            from repro.kernels.reuse_distance import ops as rd_ops
+            demands, hits, reads = rd_ops.sizing_metrics_batch(
+                addrs, writes, self.kind, self.grid,
+                interpret=use_interpret())
+        else:
+            demands, hits, reads = reuse.sizing_metrics_batch(
+                addrs, writes, self.kind, self.grid)
         ns = np.array([max(np.shape(a)[0], 1) for a in addrs], np.float64)
         curves = hits.astype(np.float64) / ns[:, None]
         if with_reads:

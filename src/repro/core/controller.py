@@ -15,15 +15,20 @@ All datapath simulation happens in fixed-shape jitted ``lax.scan`` windows
 (padded with addr = -1 no-ops). With ``batched=True`` (the default) the
 per-VM cache states are stacked into one pytree with a leading ``[V]``
 axis and each window simulates **all VMs in one vmapped dispatch**; POD
-sizing, the one-level baselines' sizing metrics (URD/TRD/WSS/reuse
-intensity via ``SizingMetric.batch``), and the promotion/eviction
-maintenance batch across VMs the same
-way (one dispatch per stage instead of V). Per-VM ways — and, for the
-one-level chassis, per-VM write policies — are traced operands, so
-heterogeneous allocations and ECI-style dynamic policies share one
-compiled executable. ``batched=False`` preserves the sequential per-VM
-architecture (separate per-VM states, V dispatches per window, host-side
-numpy maintenance) as the bit-identical reference oracle.
+sizing and the one-level baselines' sizing metrics (URD/TRD/WSS/reuse
+intensity via ``SizingMetric.batch``) batch across VMs the same way.
+ETICA's promotion/eviction maintenance goes further: the whole interval
+— Eq. 1 popularity refresh into a device-resident ``[V, K]`` table,
+queue building, and the Pallas evict/promote scatters — is ONE fused
+jitted dispatch with no host round-trips between stages
+(``repro.kernels.maintenance``; ``fused_maintenance=False`` keeps the
+staged tracker-based path as the intermediate oracle). Per-VM ways —
+and, for the one-level chassis, per-VM write policies — are traced
+operands, so heterogeneous allocations and ECI-style dynamic policies
+share one compiled executable. ``batched=False`` preserves the
+sequential per-VM architecture (separate per-VM states, V dispatches
+per window, host-side numpy maintenance) as the bit-identical reference
+oracle.
 """
 from __future__ import annotations
 
@@ -176,6 +181,8 @@ class EticaConfig:
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
     prefetch: bool = True            # double-buffer host->device blocks
+    fused_maintenance: bool = True   # one fused jitted maintenance dispatch
+    pop_capacity: int = 8192         # per-VM device popularity-table slots
 
 
 class EticaCache:
@@ -203,6 +210,11 @@ class EticaCache:
         self.ways_dram = np.zeros(num_vms, np.int32)
         self.ways_ssd = np.zeros(num_vms, np.int32)
         self.t = np.zeros(num_vms, np.int32)
+        # popularity state: the fused batched path keeps ONE [V, K]
+        # device-resident table; the staged/sequential paths use the
+        # host trackers (the table's bit-exact oracle)
+        self.pop_table = (pop.table_init(num_vms, cfg.pop_capacity)
+                          if cfg.batched and cfg.fused_maintenance else None)
         self.trackers = [pop.PopularityTracker(cfg.popularity_decay)
                          for _ in range(num_vms)]
         self.stats = [dict() for _ in range(num_vms)]
@@ -266,8 +278,10 @@ class EticaCache:
         ssd_res = simulator.resident_blocks(self.ssd[v], int(self.ways_ssd[v]))
         # eviction queue: least popular 5% of SSD-resident blocks — only
         # once the partition is near-full (an empty cache has nothing
-        # worth churning; paper evicts to make room for promotions)
-        if ssd_res.size and ssd_res.size >= 0.9 * alloc_blocks:
+        # worth churning; paper evicts to make room for promotions). The
+        # 90% gate is integer arithmetic so every path (host and device)
+        # agrees at the boundary.
+        if ssd_res.size and ssd_res.size * 10 >= alloc_blocks * 9:
             evict = self.trackers[v].least_popular(ssd_res, cfg.evict_frac)
             if evict.size:
                 self.ssd[v], flushed = simulator.evict_blocks_ref(
@@ -297,10 +311,71 @@ class EticaCache:
         return t[t >= 0]
 
     def _maintain_all(self, chunks: list[Trace | None]) -> None:
-        """All VMs' maintenance for one window: popularity refresh via one
-        batched TRD dispatch, then one vmapped eviction and one vmapped
-        promotion dispatch. Per-VM semantics identical to
-        :meth:`_maintain_seq`."""
+        """All VMs' maintenance for one window, batched.
+
+        With ``cfg.fused_maintenance`` (default) the whole interval —
+        popularity refresh into the device table, queue building, the
+        eviction scatter, and the promotion scatter — runs as ONE fused
+        jitted dispatch through the Pallas maintenance kernels
+        (:func:`repro.kernels.maintenance.ops.maintenance_interval`);
+        the state never visits the host between stages. Without it, the
+        staged path keeps host trackers and separate vmapped dispatches
+        (the intermediate oracle). Per-VM semantics are identical to
+        :meth:`_maintain_seq` either way.
+        """
+        if self.cfg.fused_maintenance:
+            self._maintain_fused(chunks)
+        else:
+            self._maintain_staged(chunks)
+
+    def _maintain_fused(self, chunks: list[Trace | None]) -> None:
+        """One fused jitted dispatch for the whole interval's maintenance
+        (device popularity table + Pallas promote/evict kernels)."""
+        from repro.kernels.maintenance import ops as maint_ops
+        cfg = self.cfg
+        empty = np.empty(0, np.int32)
+        addrs = [empty if c is None else np.asarray(c.addr) for c in chunks]
+        writes = [empty.astype(bool) if c is None else np.asarray(c.is_write)
+                  for c in chunks]
+        lens = [int(a.shape[0]) for a in addrs]
+        live = [v for v, n in enumerate(lens) if n > 0]
+        if not live:
+            return
+        # batched TRD decomposition (same bucketing as trd_distances_batch)
+        # — results stay on device and feed the fused dispatch directly.
+        # ALL VMs ride as rows (idle ones zero-length) so the fused
+        # executable is keyed only by the window bucket, not by which
+        # subset of VMs is live.
+        amat, wmat = reuse._pad_rows(addrs, writes, list(range(self.num_vms)),
+                                     lens)
+        r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
+                                     sizing_reads_only=False, chunk=256)
+        self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen = \
+            maint_ops.maintenance_interval(
+                self.ssd, self.pop_table, r.dist, r.served, amat,
+                np.asarray(lens, np.int32), self.ways_ssd, self.t,
+                evict_frac=cfg.evict_frac, decay=cfg.popularity_decay)
+        flushed, promoted, eqlen, pqlen = (
+            np.asarray(flushed), np.asarray(promoted),
+            np.asarray(eqlen), np.asarray(pqlen))
+        for v in live:
+            if eqlen[v]:
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + int(flushed[v]))
+            if pqlen[v]:
+                # each promotion = 1 disk read + 1 SSD write (endurance)
+                self.stats[v]["cache_writes_l2"] = (
+                    self.stats[v].get("cache_writes_l2", 0.0)
+                    + int(promoted[v]))
+                self.stats[v]["disk_reads"] = (
+                    self.stats[v].get("disk_reads", 0.0) + int(promoted[v]))
+
+    def _maintain_staged(self, chunks: list[Trace | None]) -> None:
+        """Staged batched maintenance (host trackers + separate vmapped
+        dispatches with host syncs between stages) — kept as the
+        intermediate oracle between :meth:`_maintain_fused` and
+        :meth:`_maintain_seq`, and as the fused path's benchmark
+        baseline."""
         cfg = self.cfg
         live = [v for v, c in enumerate(chunks) if c is not None and len(c)]
         if not live:
@@ -329,7 +404,7 @@ class EticaCache:
         evict_qs = [nothing] * self.num_vms
         for v in live:
             res = self._residents(tags_np, v)
-            if res.size and res.size >= 0.9 * self._alloc_blocks(v):
+            if res.size and res.size * 10 >= self._alloc_blocks(v) * 9:
                 evict_qs[v] = self.trackers[v].least_popular(
                     res, cfg.evict_frac)
         if any(q.size for q in evict_qs):
@@ -425,8 +500,10 @@ class EticaCache:
             ws = np.asarray(capacity_to_ways(alloc_s, gs.num_sets,
                                              gs.max_ways))
             if cfg.batched:
-                self.dram, _ = resize_batch(self.dram, self.ways_dram, wd)
-                self.ssd, flushed = resize_batch(self.ssd, self.ways_ssd, ws)
+                # both levels resized in ONE jitted dispatch
+                self.dram, self.ssd, _, flushed = simulator.resize_levels(
+                    self.dram, self.ssd, self.ways_dram, wd,
+                    self.ways_ssd, ws)
                 flushed = np.asarray(flushed)
                 for v in range(self.num_vms):
                     self.stats[v]["disk_writes"] = (

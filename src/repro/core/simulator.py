@@ -478,6 +478,22 @@ resize_batch = jax.jit(jax.vmap(resize))
 counts in one dispatch; returns (stacked state, ``[V]`` flush counts)."""
 
 
+@jax.jit
+def resize_levels(dram: CacheState, ssd: CacheState, old_dram, new_dram,
+                  old_ssd, new_ssd):
+    """Resize BOTH cache levels of all VMs in one jitted dispatch.
+
+    The two-level controller's per-interval resize: equivalent to two
+    :data:`resize_batch` calls but fused into a single executable.
+    Returns (dram, ssd, dram_flushed ``[V]``, ssd_flushed ``[V]``).
+    """
+    dram, fl_d = jax.vmap(resize)(dram, jnp.asarray(old_dram, jnp.int32),
+                                  jnp.asarray(new_dram, jnp.int32))
+    ssd, fl_s = jax.vmap(resize)(ssd, jnp.asarray(old_ssd, jnp.int32),
+                                 jnp.asarray(new_ssd, jnp.int32))
+    return dram, ssd, fl_d, fl_s
+
+
 def resident_blocks(state: CacheState, ways_active: int) -> np.ndarray:
     tags = np.asarray(state.tags)[:, : max(ways_active, 0)]
     return tags[tags >= 0]

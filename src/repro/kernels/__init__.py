@@ -9,7 +9,36 @@ the kernel bodies on CPU).
   * reuse_distance   — tiled windowed distinct-count (POD/URD/TRD), the
                        paper's PARDA hot path on the TPU VPU
   * popularity       — fused Eq. 1 exp + segment reduction
+  * maintenance      — ETICA's between-interval promote/evict scatters
+                       over stacked [V, S, W] states + the fused
+                       per-interval maintenance dispatch
   * flash_attention  — blocked causal/windowed attention fwd (GQA-native)
   * decode_attention — paged flash-decode over the two-tier KV pool
                        (scalar-prefetched page tables)
 """
+from __future__ import annotations
+
+import os
+
+
+def env_flag(name: str) -> bool | None:
+    """Tri-state env override: unset -> None, ``0``/``false`` (any
+    case) / empty -> False, anything else -> True."""
+    env = os.environ.get(name)
+    if env is None:
+        return None
+    return env.lower() not in ("0", "false", "")
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU backend.
+
+    ``ETICA_PALLAS_INTERPRET=1`` forces the interpreter (CI's
+    kernels-interpret job runs the whole suite this way on CPU), ``=0``
+    forces compiled Pallas.
+    """
+    forced = env_flag("ETICA_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced
+    import jax
+    return jax.default_backend() != "tpu"

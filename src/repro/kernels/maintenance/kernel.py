@@ -1,0 +1,219 @@
+"""Pallas TPU kernels: maintenance scatters over stacked ``[V, S, W]``.
+
+Both kernels run on a ``(V, num_set_tiles)`` grid — one VM x one strip
+of ``TS`` sets per step — with the VM's whole maintenance queue ``[Q]``
+resident in VMEM for every strip (the queue is the small operand: 5% of
+the partition, -1-padded to a power of two). The set dimension is
+innermost, so the per-VM count output block accumulates across set
+strips, the same reduction pattern as the other kernels in this repo.
+
+  * **evict**: membership mask (``tags in queue``) per strip, clearing
+    matched ways and counting dirty flushes. The ``[TS*W, Q]`` equality
+    mask is evaluated in ``QC``-column chunks to bound VMEM.
+  * **promote**: the full queue contract of
+    ``repro.core.simulator.promote_blocks_ref`` — first occurrence of an
+    address wins (optional O(Q^2/QC) in-kernel dedupe, skippable when
+    the caller guarantees unique queues), addresses already resident are
+    skipped, and the k-th eligible address of a set lands in the set's
+    k-th free active way (queue order), so a full set starves later
+    entries exactly like the sequential oracle.
+
+VMEM per step: O(TS*W + Q) vectors plus a transient ``TS x QC x W``
+selection block (default 16 x 128 x 64 = 128K lanes, 512KB of f32 —
+well inside a core's 16MB). Per-VM scalars
+(active ways, promote timestamp) ride ``(1,)`` blocks like the
+popularity kernel's cache-size scalar. ``dirty`` travels as int32 (VPU
+lane-friendly); the ops wrapper converts from/to bool.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TS = 16    # sets per grid step
+DEFAULT_QC = 128   # queue chunk streamed against each strip
+
+
+# ---------------------------------------------------------------------------
+# evict
+# ---------------------------------------------------------------------------
+
+def _evict_kernel(tags_ref, lru_ref, dirty_ref, q_ref,
+                  otags_ref, olru_ref, odirty_ref, flush_ref, *, qc: int):
+    s_blk = pl.program_id(1)
+    tags = tags_ref[0]          # [TS, W]
+    dirty = dirty_ref[0]        # [TS, W] int32 (0/1)
+    queue = q_ref[0]            # [Q], -1 = padding
+    nq = queue.shape[0]
+
+    def body(c, m):
+        blk = jax.lax.dynamic_slice(queue, (c * qc,), (qc,))
+        return m | jnp.any(tags[:, :, None] == blk[None, None, :], axis=2)
+
+    mask = jax.lax.fori_loop(0, nq // qc, body,
+                             jnp.zeros(tags.shape, bool))
+    mask = mask & (tags >= 0)   # -1 queue padding never matches a block
+
+    otags_ref[0] = jnp.where(mask, -1, tags)
+    olru_ref[0] = jnp.where(mask, -1, lru_ref[0])
+    odirty_ref[0] = jnp.where(mask, 0, dirty)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        flush_ref[...] = jnp.zeros_like(flush_ref)
+
+    flush_ref[...] += jnp.sum(mask & (dirty > 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "qc", "interpret"))
+def evict_scatter(tags, lru, dirty, queue, *, ts: int = DEFAULT_TS,
+                  qc: int = DEFAULT_QC, interpret: bool = True):
+    """Evict queued blocks from stacked states.
+
+    ``tags``/``lru``/``dirty`` are ``[V, S, W]`` int32 (``S`` a multiple
+    of ``ts``); ``queue`` is ``[V, Q]`` int32 with ``Q`` a multiple of
+    ``qc`` and ``-1`` padding. Returns ``(tags, lru, dirty, flushed[V])``.
+    """
+    v, s, w = tags.shape
+    nq = queue.shape[1]
+    grid = (v, s // ts)
+    strip = pl.BlockSpec((1, ts, w), lambda i, j: (i, j, 0))
+    per_vm = pl.BlockSpec((1,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_evict_kernel, qc=qc),
+        grid=grid,
+        in_specs=[strip, strip, strip,
+                  pl.BlockSpec((1, nq), lambda i, j: (i, 0))],
+        out_specs=[strip, strip, strip, per_vm],
+        out_shape=[jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((v,), jnp.int32)],
+        interpret=interpret,
+    )(tags, lru, dirty, queue)
+
+
+# ---------------------------------------------------------------------------
+# promote
+# ---------------------------------------------------------------------------
+
+def _promote_kernel(tags_ref, lru_ref, dirty_ref, q_ref, ways_ref, t_ref,
+                    otags_ref, olru_ref, odirty_ref, n_ref, *,
+                    num_sets: int, ts: int, qc: int, dedupe: bool):
+    s_blk = pl.program_id(1)
+    tags = tags_ref[0]          # [TS, W]
+    queue = q_ref[0]            # [Q]
+    ways = ways_ref[0]          # scalar: active ways for this VM
+    tstamp = t_ref[0]           # scalar: promote timestamp
+    n_ts, w = tags.shape
+    nq = queue.shape[0]
+
+    qidx = jnp.arange(nq, dtype=jnp.int32)
+    valid = queue >= 0
+    qa = jnp.where(valid, queue, 0)
+    local = qa % num_sets - s_blk * ts          # set index within strip
+    in_tile = valid & (local >= 0) & (local < ts)
+
+    if dedupe:
+        # first occurrence of each address wins: dup[i] = any j < i with
+        # the same address, evaluated in QC-column chunks
+        def dbody(c, dup):
+            blk = jax.lax.dynamic_slice(queue, (c * qc,), (qc,))
+            bidx = c * qc + jnp.arange(qc, dtype=jnp.int32)
+            m = ((qa[:, None] == blk[None, :]) & (blk[None, :] >= 0)
+                 & (bidx[None, :] < qidx[:, None]))
+            return dup | jnp.any(m, axis=1)
+
+        dup = jax.lax.fori_loop(0, nq // qc, dbody, jnp.zeros(nq, bool))
+        valid = valid & ~dup
+
+    active = jnp.arange(w, dtype=jnp.int32) < ways     # [W]
+    set_ids = jnp.arange(ts, dtype=jnp.int32)          # [TS]
+
+    # residency check against this strip (a block only maps to one set)
+    def pbody(c, present):
+        lblk = jax.lax.dynamic_slice(local, (c * qc,), (qc,))
+        ablk = jax.lax.dynamic_slice(qa, (c * qc,), (qc,))
+        sel = (lblk[:, None, None] == set_ids[None, :, None]) \
+            & (tags[None, :, :] == ablk[:, None, None]) \
+            & active[None, None, :]                    # [QC, TS, W]
+        return jax.lax.dynamic_update_slice(
+            present, jnp.any(sel, axis=(1, 2)), (c * qc,))
+
+    present = jax.lax.fori_loop(0, nq // qc, pbody, jnp.zeros(nq, bool))
+
+    elig = valid & in_tile & ~present & (ways > 0)
+    # rank of each eligible entry among its set's eligible entries, in
+    # queue order; the k-th one lands in the set's k-th free active way
+    eligm = (local[None, :] == set_ids[:, None]) & elig[None, :]  # [TS, Q]
+    eligm_i = eligm.astype(jnp.int32)
+    rank = jnp.cumsum(eligm_i, axis=1) - eligm_i
+    free = active[None, :] & (tags < 0)                           # [TS, W]
+    freerank = jnp.cumsum(free.astype(jnp.int32), axis=1) - 1
+    nfree = jnp.sum(free.astype(jnp.int32), axis=1)               # [TS]
+    prom = eligm & (rank < nfree[:, None])                        # [TS, Q]
+
+    # scatter: one-hot (promoted entry -> its free way), QC chunks
+    def sbody(c, carry):
+        acc, hit = carry
+        pblk = jax.lax.dynamic_slice(prom, (0, c * qc), (ts, qc))
+        rblk = jax.lax.dynamic_slice(rank, (0, c * qc), (ts, qc))
+        ablk = jax.lax.dynamic_slice(qa, (c * qc,), (qc,))
+        sel = pblk[:, :, None] & (rblk[:, :, None] == freerank[:, None, :]) \
+            & free[:, None, :]                         # [TS, QC, W]
+        acc = acc + jnp.sum(sel * ablk[None, :, None], axis=1)
+        return acc, hit | jnp.any(sel, axis=1)
+
+    acc, hit = jax.lax.fori_loop(
+        0, nq // qc, sbody,
+        (jnp.zeros(tags.shape, jnp.int32), jnp.zeros(tags.shape, bool)))
+
+    otags_ref[0] = jnp.where(hit, acc, tags)
+    olru_ref[0] = jnp.where(hit, tstamp, lru_ref[0])
+    odirty_ref[0] = jnp.where(hit, 0, dirty_ref[0])
+
+    @pl.when(s_blk == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    n_ref[...] += jnp.sum(prom).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_sets", "ts", "qc", "interpret",
+                                    "dedupe"))
+def promote_scatter(tags, lru, dirty, queue, ways, t, *, num_sets: int,
+                    ts: int = DEFAULT_TS, qc: int = DEFAULT_QC,
+                    dedupe: bool = True, interpret: bool = True):
+    """Promote queued blocks into free active ways of stacked states.
+
+    Shapes as :func:`evict_scatter` plus per-VM ``ways``/``t`` ``[V]``
+    int32. ``num_sets`` is the REAL set count (tiles may pad ``S``
+    beyond it; padded sets are never addressed since ``addr %% num_sets
+    < num_sets``). ``dedupe=False`` skips the O(Q^2) first-occurrence
+    pass when the caller guarantees unique queue entries (the popularity
+    table's queues are unique by construction). Returns ``(tags, lru,
+    dirty, promoted[V])``.
+    """
+    v, s, w = tags.shape
+    nq = queue.shape[1]
+    grid = (v, s // ts)
+    strip = pl.BlockSpec((1, ts, w), lambda i, j: (i, j, 0))
+    per_vm = pl.BlockSpec((1,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_promote_kernel, num_sets=num_sets, ts=ts, qc=qc,
+                          dedupe=dedupe),
+        grid=grid,
+        in_specs=[strip, strip, strip,
+                  pl.BlockSpec((1, nq), lambda i, j: (i, 0)),
+                  per_vm, per_vm],
+        out_specs=[strip, strip, strip, per_vm],
+        out_shape=[jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(tags.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((v,), jnp.int32)],
+        interpret=interpret,
+    )(tags, lru, dirty, queue, ways, t)

@@ -1,0 +1,211 @@
+"""Jitted wrappers for the maintenance kernels + the fused interval op.
+
+``evict`` / ``promote`` mirror the contracts of
+``repro.core.simulator.evict_blocks_batch`` / ``promote_blocks_batch``
+but run the scatters through the Pallas kernels (interpret mode on CPU,
+compiled on TPU — ``interpret=None`` picks by backend, overridable with
+``ETICA_PALLAS_INTERPRET=0|1``).
+
+``maintenance_interval`` is the whole between-interval maintenance of
+the batched :class:`~repro.core.controller.EticaCache` as ONE jitted
+dispatch: Eq. 1 contributions -> device popularity-table update ->
+eviction-queue build -> evict kernel -> free-space recount ->
+promotion-queue build -> promote kernel. The post-eviction state feeds
+the promotion stage on device — there is no ``np.asarray(state)`` sync
+anywhere between stages; only the final per-VM counts ever reach the
+host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import popularity as pop
+from repro.core.simulator import CacheState, _next_pow2, _pad_addrs_batch
+from repro.kernels import use_interpret
+
+from .kernel import DEFAULT_QC, DEFAULT_TS, evict_scatter, promote_scatter
+
+
+def _tiles(s: int, ts: int) -> tuple[int, int]:
+    """(effective set-tile, padded S) — S padded up to a tile multiple."""
+    ts = min(ts, _next_pow2(s))
+    return ts, -(-s // ts) * ts
+
+
+def _pad_sets(x, s_pad: int, fill):
+    v, s, w = x.shape
+    if s == s_pad:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((v, s_pad - s, w), fill, x.dtype)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "qc", "interpret"))
+def _evict_state(state: CacheState, queue, *, ts, qc, interpret):
+    v, s, w = state.tags.shape
+    ts, s_pad = _tiles(s, ts)
+    tags, lru, dirty, flushed = evict_scatter(
+        _pad_sets(state.tags, s_pad, -1),
+        _pad_sets(state.lru, s_pad, -1),
+        _pad_sets(state.dirty.astype(jnp.int32), s_pad, 0),
+        queue, ts=ts, qc=qc, interpret=interpret)
+    return CacheState(tags[:, :s], lru[:, :s],
+                      dirty[:, :s].astype(bool)), flushed
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ts", "qc", "dedupe", "interpret"))
+def _promote_state(state: CacheState, queue, ways, t, *, ts, qc, dedupe,
+                   interpret):
+    v, s, w = state.tags.shape
+    ts, s_pad = _tiles(s, ts)
+    tags, lru, dirty, n = promote_scatter(
+        _pad_sets(state.tags, s_pad, -1),
+        _pad_sets(state.lru, s_pad, -1),
+        _pad_sets(state.dirty.astype(jnp.int32), s_pad, 0),
+        queue, jnp.asarray(ways, jnp.int32), jnp.asarray(t, jnp.int32),
+        num_sets=s, ts=ts, qc=qc, dedupe=dedupe, interpret=interpret)
+    return CacheState(tags[:, :s], lru[:, :s],
+                      dirty[:, :s].astype(bool)), n
+
+
+def _queue_matrix(queues) -> np.ndarray:
+    """Ragged per-VM queues -> one [V, Q] -1-padded rectangle, Q a
+    power-of-two multiple of the chunk width."""
+    q = _pad_addrs_batch(queues)
+    width = _next_pow2(q.shape[1])
+    out = np.full((q.shape[0], width), -1, np.int32)
+    out[:, : q.shape[1]] = q
+    return out
+
+
+def _pow2_queue(queue) -> jax.Array:
+    """Pad a [V, Q] queue to a power-of-two width (with -1 no-ops) so
+    the kernels' chunked loops cover every column — a non-multiple tail
+    would otherwise be silently skipped."""
+    queue = jnp.asarray(queue, jnp.int32)
+    width = _next_pow2(max(queue.shape[1], 1))
+    if width == queue.shape[1]:
+        return queue
+    return jnp.concatenate(
+        [queue, jnp.full((queue.shape[0], width - queue.shape[1]), -1,
+                         jnp.int32)], axis=1)
+
+
+def evict(state: CacheState, queues, *, ts: int = DEFAULT_TS,
+          qc: int = DEFAULT_QC, interpret: bool | None = None):
+    """Kernel-backed :func:`repro.core.simulator.evict_blocks_batch`.
+
+    ``queues`` is one (possibly empty) address array per VM, or an
+    already-rectangular ``[V, Q]`` array with ``-1`` padding. Returns
+    ``(state, flushed[V])`` with identical states/counts to the numpy
+    oracle (``ref.evict_ref``).
+    """
+    if not isinstance(queues, (np.ndarray, jax.Array)):
+        queues = _queue_matrix(queues)
+    queues = _pow2_queue(queues)
+    qc = min(qc, queues.shape[1])
+    interpret = use_interpret() if interpret is None else interpret
+    return _evict_state(state, queues, ts=ts, qc=qc, interpret=interpret)
+
+
+def promote(state: CacheState, queues, ways, t, *, ts: int = DEFAULT_TS,
+            qc: int = DEFAULT_QC, assume_unique: bool = False,
+            interpret: bool | None = None):
+    """Kernel-backed :func:`repro.core.simulator.promote_blocks_batch`.
+
+    ``ways``/``t`` are ``[V]``. ``assume_unique=True`` skips the
+    in-kernel first-occurrence dedupe (valid when the caller guarantees
+    unique addresses per queue, as the popularity table does). Returns
+    ``(state, promoted[V])``, oracle-identical (``ref.promote_ref``).
+    """
+    if not isinstance(queues, (np.ndarray, jax.Array)):
+        queues = _queue_matrix(queues)
+    queues = _pow2_queue(queues)
+    qc = min(qc, queues.shape[1])
+    interpret = use_interpret() if interpret is None else interpret
+    return _promote_state(state, queues, jnp.asarray(ways, jnp.int32),
+                          jnp.asarray(t, jnp.int32), ts=ts, qc=qc,
+                          dedupe=not assume_unique, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# the fused per-interval dispatch
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("evict_frac", "decay", "ts", "qc", "interpret"))
+def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
+                      dist, served, waddr, wlen, ways, t, *,
+                      evict_frac: float, decay: float, ts: int, qc: int,
+                      interpret: bool):
+    v, s, w = ssd.tags.shape
+    nval = jnp.asarray(wlen, jnp.int32)
+    live = nval > 0
+    ways = jnp.asarray(ways, jnp.int32)
+    alloc = ways * s
+
+    # 1) Eq. 1 popularity refresh, straight into the [V, K] device table
+    contrib = pop.contributions(dist, served,
+                                jnp.maximum(alloc, 1)[:, None])
+    table = pop.table_update(table, waddr, contrib, nval, live, decay)
+
+    # 2) eviction queue (bottom-frac of residents when >= 90% full) ->
+    #    evict kernel
+    equeue, eqlen = pop.table_least_popular(table, ssd.tags, ways, alloc,
+                                            live, evict_frac)
+    equeue = pop.truncate_queue(equeue, _next_pow2(s * w))
+    ssd, flushed = _evict_state(ssd, equeue, ts=ts,
+                                qc=min(qc, equeue.shape[1]),
+                                interpret=interpret)
+
+    # 3) free space from the POST-eviction state (no host sync) ->
+    #    promotion queue -> promote kernel
+    active = jnp.arange(w, dtype=jnp.int32)[None, None, :] < ways[:, None, None]
+    n_res = jnp.sum((ssd.tags >= 0) & active, axis=(1, 2)).astype(jnp.int32)
+    free = jnp.maximum(alloc - n_res, 0)
+    pqueue, pqlen = pop.table_top_known(
+        table, ssd.tags, ways, free, live,
+        width=_next_pow2(min(table.capacity, s * w)))
+    ssd, promoted = _promote_state(ssd, pqueue, ways,
+                                   jnp.asarray(t, jnp.int32), ts=ts,
+                                   qc=min(qc, pqueue.shape[1]),
+                                   dedupe=False, interpret=interpret)
+    return ssd, table, flushed, promoted, eqlen, pqlen
+
+
+def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
+                         dist, served, waddr, wlen, ways, t, *,
+                         evict_frac: float, decay: float,
+                         ts: int = DEFAULT_TS, qc: int = DEFAULT_QC,
+                         interpret: bool | None = None):
+    """One interval of ETICA maintenance for all VMs, fused.
+
+    Args:
+      ssd: stacked ``[V, S, W]`` SSD-level :class:`CacheState`.
+      table: the ``[V, K]`` :class:`~repro.core.popularity.PopularityTable`.
+      dist/served/waddr: ``[V, N]`` TRD distance channels + addresses of
+        the VMs' windows (pad tails masked by ``wlen``). Rows are kept
+        rectangular across ALL VMs — idle VMs ride along as zero-length
+        rows (``wlen == 0`` -> untouched) — so the executable is keyed
+        only by the window's power-of-two bucket, never by which subset
+        of VMs happens to be live.
+      wlen: ``[V]`` valid window lengths (0 = idle VM, no maintenance).
+      ways/t: ``[V]`` active SSD ways and per-VM clocks.
+      evict_frac/decay: §4.2.1 bottom-fraction and aging factor.
+
+    Returns ``(ssd, table, flushed[V], promoted[V], evict_qlen[V],
+    promo_qlen[V])`` — states and table stay on device; the count
+    vectors are the only thing a caller needs to sync for Stats.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    return _maintenance_impl(
+        ssd, table, jnp.asarray(dist, jnp.int32), jnp.asarray(served, bool),
+        jnp.asarray(waddr, jnp.int32), jnp.asarray(wlen, jnp.int32),
+        jnp.asarray(ways, jnp.int32), jnp.asarray(t, jnp.int32),
+        evict_frac=float(evict_frac), decay=float(decay), ts=ts, qc=qc,
+        interpret=interpret)

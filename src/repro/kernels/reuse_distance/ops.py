@@ -28,8 +28,11 @@ or total re-reference populations.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policies import Policy
 from repro.core import reuse as core_reuse
@@ -110,3 +113,57 @@ def sizing_reduction(addr, is_write, kind: str, grid, *, n_valid=None,
     if with_reads:
         return demand, hits, core_reuse.read_count(is_write, n_valid)
     return demand, hits
+
+
+# ---------------------------------------------------------------------------
+# batched kernel-backed sizing (the TPU route of SizingMetric.batch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "interpret", "ti", "tj"))
+def _sizing_reduce_vmapped(amat, wmat, nvec, grid, kind, interpret, ti, tj):
+    policy, reads_only = core_reuse.sizing_policy(kind)
+
+    def one(addr, is_write, n_valid):
+        r = reuse_distances(addr, is_write, policy,
+                            sizing_reads_only=reads_only,
+                            interpret=interpret, ti=ti, tj=tj)
+        demand, hits = core_reuse.sizing_from_dists(addr, is_write, r,
+                                                    n_valid, grid, kind)
+        return demand, hits, core_reuse.read_count(is_write, n_valid)
+
+    return jax.vmap(one)(amat, wmat, nvec)
+
+
+def sizing_metrics_batch(addrs, writes, kind: str, grid, *,
+                         interpret: bool = True, ti: int = 256,
+                         tj: int = 512):
+    """Kernel-backed ``core.reuse.sizing_metrics_batch``: same ragged
+    contract and ``(demands, hit_counts, read_counts)`` returns, but the
+    O(N^2) distance channel of every VM runs through the Pallas
+    ``count_between`` kernel, vmapped across the stacked rows (the
+    batching rule adds the VM axis to the kernel grid). This is what
+    ``SizingMetric.batch`` dispatches to when the backend compiles
+    Pallas (TPU) — bit-identical to the jnp path, which stays the CPU
+    fallback and parity oracle (``tests/test_kernels.py``).
+    """
+    if kind not in core_reuse.SIZING_KINDS:
+        raise ValueError(
+            f"kind must be one of {core_reuse.SIZING_KINDS}, got {kind!r}")
+    lens = [int(np.shape(a)[0]) for a in addrs]
+    grid = np.asarray(grid, np.int32)
+    demands = np.zeros(len(lens), np.int64)
+    hits = np.zeros((len(lens), grid.size), np.int64)
+    reads = np.zeros(len(lens), np.int64)
+    live = [v for v, n in enumerate(lens) if n > 0]
+    if not live:
+        return demands, hits, reads
+    amat, wmat = core_reuse._pad_rows(addrs, writes, live, lens)
+    nvec = np.array([lens[v] for v in live], np.int32)
+    d, h, r = _sizing_reduce_vmapped(amat, wmat, nvec, jnp.asarray(grid),
+                                     kind=kind, interpret=interpret,
+                                     ti=ti, tj=tj)
+    demands[live] = np.asarray(d, np.int64)
+    hits[live] = np.asarray(h, np.int64)
+    reads[live] = np.asarray(r, np.int64)
+    return demands, hits, reads

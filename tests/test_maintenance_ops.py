@@ -5,16 +5,22 @@ original numpy implementations are kept as ``*_ref`` oracles. On
 randomized states the vectorized versions must produce identical states
 and counts — including promote's ordering contract (first occurrence
 wins, free active ways fill in ascending order in queue order) and -1
-padding entries being ignored.
+padding entries being ignored. The controller-level test at the bottom
+closes the loop across every maintenance mode: one interval of
+`EticaCache` maintenance through the fused kernel dispatch, the staged
+vmapped path, and the sequential per-VM numpy oracle must agree bit for
+bit on Stats, allocations, and final cache states.
 """
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.simulator import (CacheState, evict_blocks, evict_blocks_ref,
                                   evict_blocks_batch, promote_blocks,
                                   promote_blocks_batch, promote_blocks_ref,
-                                  resize, resize_batch, resize_ref,
-                                  resident_blocks, stack_states)
+                                  resize, resize_batch, resize_levels,
+                                  resize_ref, resident_blocks, stack_states)
 
 
 def random_state(rng, num_sets, ways, addr_space=40):
@@ -130,3 +136,67 @@ def test_batched_maintenance_matches_per_vm():
         assert int(n[v]) == n_ref
         for x, y in zip(want, got):
             assert np.array_equal(np.asarray(x), np.asarray(y[v]))
+
+
+def test_resize_levels_matches_two_resize_batches():
+    """The fused two-level resize == two separate vmapped resizes."""
+    rng = np.random.default_rng(17)
+    num_vms, num_sets, ways = 3, 4, 6
+    dram = stack_states([random_state(rng, num_sets, ways)
+                         for _ in range(num_vms)])
+    ssd = stack_states([random_state(rng, num_sets, ways)
+                        for _ in range(num_vms)])
+    old_d = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    new_d = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    old_s = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    new_s = rng.integers(0, ways + 1, num_vms).astype(np.int32)
+    gd, gs, fd, fs = resize_levels(dram, ssd, old_d, new_d, old_s, new_s)
+    wd, wfd = resize_batch(dram, old_d, new_d)
+    ws, wfs = resize_batch(ssd, old_s, new_s)
+    assert np.array_equal(np.asarray(fd), np.asarray(wfd))
+    assert np.array_equal(np.asarray(fs), np.asarray(wfs))
+    for got, want in ((gd, wd), (gs, ws)):
+        for x, y in zip(got, want):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_etica_maintenance_modes_bit_identical():
+    """One EticaCache workload through all three maintenance modes —
+    fused kernel dispatch (default), staged vmapped path, sequential
+    per-VM numpy — must agree exactly: Stats dicts, allocation
+    histories, and final DRAM/SSD states."""
+    from repro.core import EticaCache, EticaConfig, Geometry, interleave
+    from repro.traces import make
+
+    geo = Geometry(num_sets=8, max_ways=16)
+    trace = interleave(
+        [make(n, 2000, seed=i, addr_offset=i * 10_000_000, scale=0.25)
+         for i, n in enumerate(["hm_1", "usr_0", "web_3"])], seed=0)
+    base = EticaConfig(dram_capacity=60, ssd_capacity=120,
+                       geometry_dram=geo, geometry_ssd=geo,
+                       resize_interval=1000, promo_interval=250,
+                       mode="full")
+    variants = {
+        "fused": dataclasses.replace(base),
+        "staged": dataclasses.replace(base, fused_maintenance=False),
+        "sequential": dataclasses.replace(base, batched=False),
+    }
+    results, caches = {}, {}
+    for name, cfg in variants.items():
+        cache = EticaCache(cfg, 3)
+        results[name] = cache.run(trace)
+        caches[name] = cache
+    for other in ("staged", "sequential"):
+        for v in range(3):
+            assert results["fused"][v].stats == results[other][v].stats, \
+                (other, v)
+            assert np.array_equal(results["fused"][v].alloc_history,
+                                  results[other][v].alloc_history)
+            for x, y in zip(caches["fused"].vm_ssd(v),
+                            caches[other].vm_ssd(v)):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                    (other, "ssd", v)
+            for x, y in zip(caches["fused"].vm_dram(v),
+                            caches[other].vm_dram(v)):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                    (other, "dram", v)

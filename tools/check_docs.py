@@ -13,7 +13,11 @@ Checks, over README.md and docs/*.md:
      trace-import CLI (``python -m repro.traces.store import``) for a
      module that actually exists, and docs/architecture.md links both
      streaming modules (``traces/store.py`` and ``traces/stream.py``),
-     so the link check in (1) keeps validating them.
+     so the link check in (1) keeps validating them;
+  4. the maintenance-pipeline docs stay wired up: docs/architecture.md
+     links the ``kernels/maintenance`` package (kernel + ops) and the
+     README module map names ``kernels/maintenance/``, for a package
+     that actually exists on disk.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -90,6 +94,28 @@ def check_streaming_docs() -> list[str]:
     return problems
 
 
+def check_maintenance_docs() -> list[str]:
+    problems = []
+    pkg = ROOT / "src/repro/kernels/maintenance"
+    for mod in ("kernel.py", "ops.py", "ref.py"):
+        if not (pkg / mod).exists():
+            problems.append(f"src/repro/kernels/maintenance/{mod} missing "
+                            "(docs describe the maintenance kernel package)")
+    readme = (ROOT / "README.md").read_text()
+    if "kernels/maintenance/" not in readme:
+        problems.append("README.md: module map does not name "
+                        "kernels/maintenance/")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        targets = set(LINK_RE.findall(arch.read_text()))
+        for mod in ("kernels/maintenance", "kernels/maintenance/kernel.py",
+                    "kernels/maintenance/ops.py"):
+            if not any(t.rstrip("/").endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: maintenance module "
+                                f"{mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -100,6 +126,7 @@ def main() -> int:
         problems.extend(check_links(md))
     problems.extend(check_verify_command())
     problems.extend(check_streaming_docs())
+    problems.extend(check_maintenance_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
