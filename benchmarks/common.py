@@ -57,6 +57,23 @@ def vm_mix(names, reqs=REQS, scale=SCALE):
     return interleave(traces, seed=42)
 
 
+def vm_mix_source(names, reqs=REQS, scale=SCALE, streamed=False,
+                  shard_size=4096):
+    """The benchmark mix as either an in-memory Trace or — with
+    ``streamed`` — the same arrival stream persisted shard-by-shard via
+    :func:`repro.traces.make_store` (same per-VM seeds / address stride /
+    interleave seed, so results are bit-identical). Controllers accept
+    the returned :class:`TraceStore` directly."""
+    if not streamed:
+        return vm_mix(names, reqs, scale)
+    import tempfile
+    from pathlib import Path
+    from repro.traces import make_store
+    root = Path(tempfile.mkdtemp(prefix="bench_trace_store_"))
+    return make_store(root / "store", list(names), reqs, seed=0, scale=scale,
+                      shard_size=shard_size)
+
+
 def etica_config(mode="full", dram=DRAM_CAP, ssd=SSD_CAP):
     return EticaConfig(dram_capacity=dram, ssd_capacity=ssd,
                        geometry_dram=GEO, geometry_ssd=GEO,

@@ -8,13 +8,13 @@ import numpy as np
 from repro.core import EticaCache, make_eci_cache
 
 from .common import (DRAM_CAP, GEO, RESIZE, SSD_CAP, Timer, etica_config,
-                     row, vm_mix)
+                     row, vm_mix_source)
 
 VMS = ["hm_1", "ts_0", "usr_0", "web_3", "wdev_0", "src2_0"]
 
 
-def main():
-    trace = vm_mix(VMS)
+def main(streamed: bool = False):
+    trace = vm_mix_source(VMS, streamed=streamed)
     out = {}
     for name, runner in [
         ("etica_full", lambda: EticaCache(etica_config("full"), len(VMS))),
@@ -47,4 +47,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(streamed="--streamed" in sys.argv)

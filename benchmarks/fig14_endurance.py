@@ -8,13 +8,13 @@ import numpy as np
 from repro.core import EticaCache, make_eci_cache
 
 from .common import (DRAM_CAP, GEO, RESIZE, SSD_CAP, Timer, etica_config,
-                     row, vm_mix)
+                     row, vm_mix_source)
 
 VMS = ["web_3", "stg_1", "src2_0", "rsrch_0", "hm_1", "usr_0"]
 
 
-def main():
-    trace = vm_mix(VMS)
+def main(streamed: bool = False):
+    trace = vm_mix_source(VMS, streamed=streamed)
     with Timer() as t1:
         etica = EticaCache(etica_config("full"), len(VMS)).run(trace)
     with Timer() as t2:
@@ -35,4 +35,5 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(streamed="--streamed" in sys.argv)

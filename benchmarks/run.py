@@ -21,6 +21,7 @@ MODULES = [
     "serving_two_tier",
     "kernels_bench",
     "trace_streaming",
+    "classification_bench",
 ]
 
 

@@ -1,0 +1,23 @@
+"""IO-classification subsystem: rule-driven sub-partitions, per-class
+write policies, and sequential-cutoff bypass (Open-CAS io_class model).
+
+See :mod:`repro.classify.rules` for the vectorized rule engine and
+:mod:`repro.classify.classifier` for the class→sub-partition mapping the
+controllers consume (``EticaConfig.classifier`` /
+``SingleLevelConfig.classifier``).
+"""
+from .rules import (ClassRule, IOClass, RulePlan, compile_rules,
+                    classify_block, classify_ref)
+from .classifier import Classifier, match_all, seq_cutoff
+
+__all__ = [
+    "ClassRule",
+    "IOClass",
+    "RulePlan",
+    "compile_rules",
+    "classify_block",
+    "classify_ref",
+    "Classifier",
+    "match_all",
+    "seq_cutoff",
+]

@@ -16,8 +16,9 @@ Layering (bottom-up):
 """
 from .policies import LEVEL_LATENCY, Level, Policy, T_DRAM, T_HDD, T_SSD
 from .trace import Trace, interleave, pad_batch, split_by_vm
-from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes, mrc, pod,
-                    pod_distances, trd, trd_distances, urd, urd_distances)
+from .reuse import (DistResult, demand_blocks, hit_counts_at_sizes,
+                    hit_counts_at_sizes_weighted, mrc, pod, pod_distances,
+                    trd, trd_distances, urd, urd_distances)
 from .popularity import (PopularityTable, PopularityTracker, block_scores,
                          contributions, table_init, table_least_popular,
                          table_len, table_scores, table_top_known,
@@ -27,8 +28,12 @@ from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
                         evict_blocks, make_cache, make_cache_batch,
                         policy_flags, promote_blocks, resize, resize_batch,
                         resize_levels, simulate_single_level,
-                        simulate_single_level_batch, simulate_two_level,
-                        simulate_two_level_batch, stack_states,
+                        simulate_single_level_batch,
+                        simulate_single_level_classified,
+                        simulate_single_level_classified_batch,
+                        simulate_two_level, simulate_two_level_batch,
+                        simulate_two_level_classified,
+                        simulate_two_level_classified_batch, stack_states,
                         unstack_states)
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
                          PartitionedSingleLevelCache, PolicyChooser,
@@ -42,7 +47,8 @@ from .baselines import (SizingMetric, make_centaur, make_eci_cache,
 __all__ = [
     "LEVEL_LATENCY", "Level", "Policy", "T_DRAM", "T_HDD", "T_SSD",
     "Trace", "interleave", "pad_batch", "split_by_vm",
-    "DistResult", "demand_blocks", "hit_counts_at_sizes", "mrc", "pod",
+    "DistResult", "demand_blocks", "hit_counts_at_sizes",
+    "hit_counts_at_sizes_weighted", "mrc", "pod",
     "pod_distances", "trd", "trd_distances", "urd", "urd_distances",
     "PopularityTable", "PopularityTracker", "block_scores", "contributions",
     "table_init", "table_least_popular", "table_len", "table_scores",
@@ -52,7 +58,10 @@ __all__ = [
     "evict_blocks", "make_cache", "make_cache_batch", "policy_flags",
     "promote_blocks", "resize", "resize_batch", "resize_levels",
     "simulate_single_level", "simulate_single_level_batch",
+    "simulate_single_level_classified",
+    "simulate_single_level_classified_batch",
     "simulate_two_level", "simulate_two_level_batch",
+    "simulate_two_level_classified", "simulate_two_level_classified_batch",
     "stack_states", "unstack_states",
     "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
     "PartitionedSingleLevelCache", "PolicyChooser", "SingleLevelConfig",

@@ -140,6 +140,40 @@ def _acc(d: dict[str, float], st: Stats) -> None:
         d[k] = d.get(k, 0.0) + float(v)
 
 
+def _cls_chunk(cls_subs: list[np.ndarray], k: int, chunk: int) -> np.ndarray:
+    """The ``[V, chunk]`` class-id block matching datapath chunk ``k``
+    (padding positions are class 0 — masked no-ops either way)."""
+    out = np.zeros((len(cls_subs), chunk), np.int32)
+    for v, cs in enumerate(cls_subs):
+        seg = cs[k * chunk:(k + 1) * chunk]
+        out[v, :len(seg)] = seg
+    return out
+
+
+def _class_policy_flags(pol_vc: list[list[Policy]]) -> "simulator.PolicyFlags":
+    """``[V, C]`` :class:`~repro.core.simulator.PolicyFlags` from per-
+    (VM, class) policies (classifier override or the VM's own policy)."""
+    f = lambda attr: np.asarray(
+        [[getattr(p, attr) for p in row] for row in pol_vc], bool)
+    return simulator.PolicyFlags(f("allocates_reads"), f("write_invalidates"),
+                                 f("holds_dirty"), f("write_through"))
+
+
+def _strip_bypass(chunks: list[Trace | None], cls_subs: list[np.ndarray],
+                  k: int, chunk: int, byp: np.ndarray) -> list[Trace | None]:
+    """Drop bypass-class requests from a maintenance chunk list: bypassed
+    requests never touch the cache, so they must not feed popularity
+    either. Chunks without bypassed requests pass through unchanged."""
+    out = []
+    for v, c in enumerate(chunks):
+        if c is None or len(c) == 0:
+            out.append(c)
+            continue
+        m = ~byp[cls_subs[v][k * chunk:(k + 1) * chunk]]
+        out.append(c if m.all() else c[m])
+    return out
+
+
 def _mrc_grid(geom: Geometry, points: int = 17) -> np.ndarray:
     ways = np.unique(np.round(np.linspace(0, geom.max_ways, points)).astype(int))
     return (ways * geom.num_sets).astype(np.int64)
@@ -183,6 +217,7 @@ class EticaConfig:
     prefetch: bool = True            # double-buffer host->device blocks
     fused_maintenance: bool = True   # one fused jitted maintenance dispatch
     pop_capacity: int = 8192         # per-VM device popularity-table slots
+    classifier: object | None = None  # repro.classify.Classifier | None
 
 
 class EticaCache:
@@ -220,6 +255,15 @@ class EticaCache:
         self.stats = [dict() for _ in range(num_vms)]
         self.logs_dram: list[IntervalLog] = []
         self.logs_ssd: list[IntervalLog] = []
+        # IO classification (repro.classify): per-VM sequential-run carry
+        # plus the per-class tables the classified simulators consume
+        self.classifier = cfg.classifier
+        if self.classifier is not None:
+            self._cls_end, self._cls_len = self.classifier.init_carry(num_vms)
+            self._byp = np.asarray(self.classifier.bypass, bool)
+            c = self.classifier.num_classes
+            self._lo_d = self._hi_d = np.zeros((num_vms, c), np.int32)
+            self._lo_s = self._hi_s = np.zeros((num_vms, c), np.int32)
 
     def vm_dram(self, v: int) -> CacheState:
         return _vm_slice(self.dram, v) if self.cfg.batched else self.dram[v]
@@ -229,26 +273,49 @@ class EticaCache:
 
     # -- sizing -----------------------------------------------------------
     def _size_level(self, subs: list[Trace], policy: Policy, geom: Geometry,
-                    capacity: int):
+                    capacity: int, cls_subs: list[np.ndarray] | None = None):
         grid = _mrc_grid(geom, self.cfg.mrc_points)
         demands = np.zeros(self.num_vms, np.int64)
         curves = np.zeros((self.num_vms, grid.size))
+        addrs = [np.asarray(s.addr) for s in subs]
+        writes = [np.asarray(s.is_write) for s in subs]
+        wts = None
+        if cls_subs is not None:
+            # per-class sizing weights: weight-0 (bypass) requests never
+            # reach the cache, so they are cut from the sizing sub-traces;
+            # the rest weight the hit curves per class
+            cw = self.classifier.weights
+            wts = []
+            for v, cs in enumerate(cls_subs):
+                w_req = cw[cs]
+                keep = w_req > 0
+                if not keep.all():
+                    addrs[v] = addrs[v][keep]
+                    writes[v] = writes[v][keep]
+                    w_req = w_req[keep]
+                wts.append(w_req)
         if self.cfg.batched:
             # all VMs' POD decompositions in one vmapped dispatch
-            dists = reuse.pod_distances_batch(
-                [np.asarray(s.addr) for s in subs],
-                [np.asarray(s.is_write) for s in subs], policy)
+            dists = reuse.pod_distances_batch(addrs, writes, policy)
         else:
-            dists = [reuse.pod_distances(s.addr, s.is_write, policy)
-                     if len(s) else None for s in subs]
-        for v, (sub, r) in enumerate(zip(subs, dists)):
+            dists = [reuse.pod_distances(a, w, policy) if a.size else None
+                     for a, w in zip(addrs, writes)]
+        for v, r in enumerate(dists):
             if r is None:
                 continue
             demands[v] = min(reuse.demand_blocks(int(r.max)), geom.capacity)
-            hits = reuse.hit_counts_at_sizes(r.dist, r.served, grid)
-            curves[v] = np.asarray(hits, np.float64) / max(len(sub), 1)
+            if wts is None:
+                hits = reuse.hit_counts_at_sizes(r.dist, r.served, grid)
+                curves[v] = np.asarray(hits, np.float64) / max(len(subs[v]), 1)
+            else:
+                hits = reuse.hit_counts_at_sizes_weighted(
+                    r.dist, r.served, grid, wts[v])
+                curves[v] = hits / max(wts[v].sum(), 1)
         res = _partition(demands, curves, grid, capacity)
-        counts = np.array([len(s) for s in subs], np.float64)
+        if wts is None:
+            counts = np.array([len(s) for s in subs], np.float64)
+        else:
+            counts = np.array([w.sum() for w in wts], np.float64)
         alloc = _expand_to_capacity(res.alloc, counts, capacity, geom)
         return alloc, demands, dists
 
@@ -350,15 +417,21 @@ class EticaCache:
                                      lens)
         r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                      sizing_reads_only=False, chunk=256)
-        self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen = \
+        self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen, pdrops = \
             maint_ops.maintenance_interval(
                 self.ssd, self.pop_table, r.dist, r.served, amat,
                 np.asarray(lens, np.int32), self.ways_ssd, self.t,
                 evict_frac=cfg.evict_frac, decay=cfg.popularity_decay)
-        flushed, promoted, eqlen, pqlen = (
+        flushed, promoted, eqlen, pqlen, pdrops = (
             np.asarray(flushed), np.asarray(promoted),
-            np.asarray(eqlen), np.asarray(pqlen))
+            np.asarray(eqlen), np.asarray(pqlen), np.asarray(pdrops))
         for v in live:
+            if pdrops[v]:
+                # merge-overflow: popularity entries pushed past the [V, K]
+                # table's capacity this interval (device-table path only —
+                # the host trackers are effectively unbounded)
+                self.stats[v]["pop_drops"] = (
+                    self.stats[v].get("pop_drops", 0.0) + int(pdrops[v]))
             if eqlen[v]:
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + int(flushed[v]))
@@ -437,24 +510,36 @@ class EticaCache:
                         self.stats[v].get("disk_reads", 0.0) + int(n[v]))
 
     # -- datapath ----------------------------------------------------------
-    def _run_chunk_batched(self, a, w, chunks: list[Trace | None]) -> None:
+    def _run_chunk_batched(self, a, w, chunks: list[Trace | None],
+                           cmat: np.ndarray | None = None) -> None:
         """One vmapped dispatch simulates this window for every VM.
 
         ``a``/``w`` are the rectangular ``[V, chunk]`` request block (host
         numpy or already-transferred device arrays from the streaming
         prefetcher); ``chunks`` the ragged per-VM views for stats
-        attribution."""
+        attribution. ``cmat`` is the matching ``[V, chunk]`` class-id
+        block when a classifier is configured."""
         cfg = self.cfg
-        self.dram, self.ssd, st, t_end = simulator.simulate_two_level_batch(
-            a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
-            mode=cfg.mode, t0=self.t)
+        if cmat is None:
+            self.dram, self.ssd, st, t_end = \
+                simulator.simulate_two_level_batch(
+                    a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
+                    mode=cfg.mode, t0=self.t)
+        else:
+            self.dram, self.ssd, st, t_end = \
+                simulator.simulate_two_level_classified_batch(
+                    a, w, cmat, self.dram, self.ssd, self.ways_dram,
+                    self.ways_ssd, self._byp, self._lo_d, self._hi_d,
+                    self._lo_s, self._hi_s, mode=cfg.mode, t0=self.t)
         self.t = np.asarray(t_end)
         st = jax.device_get(st)
         for v, chunk in enumerate(chunks):
             if chunk is not None:
                 _acc(self.stats[v], Stats(*[f[v] for f in st]))
 
-    def _run_chunk_sequential(self, chunks: list[Trace | None]) -> None:
+    def _run_chunk_sequential(self, chunks: list[Trace | None],
+                              cls_subs: list[np.ndarray] | None = None,
+                              k: int = 0) -> None:
         """Reference oracle: V sequential per-VM dispatches."""
         cfg = self.cfg
         for v, chunk in enumerate(chunks):
@@ -462,11 +547,24 @@ class EticaCache:
                 continue
             a, w = _pad(np.asarray(chunk.addr, np.int32),
                         np.asarray(chunk.is_write), cfg.promo_interval)
-            self.dram[v], self.ssd[v], st, t_end = \
-                simulator.simulate_two_level(
-                    a, w, self.dram[v], self.ssd[v],
-                    int(self.ways_dram[v]), int(self.ways_ssd[v]),
-                    mode=cfg.mode, t0=int(self.t[v]))
+            if cls_subs is None:
+                self.dram[v], self.ssd[v], st, t_end = \
+                    simulator.simulate_two_level(
+                        a, w, self.dram[v], self.ssd[v],
+                        int(self.ways_dram[v]), int(self.ways_ssd[v]),
+                        mode=cfg.mode, t0=int(self.t[v]))
+            else:
+                seg = cls_subs[v][k * cfg.promo_interval:
+                                  (k + 1) * cfg.promo_interval]
+                cpad = np.zeros(cfg.promo_interval, np.int32)
+                cpad[:len(seg)] = seg
+                self.dram[v], self.ssd[v], st, t_end = \
+                    simulator.simulate_two_level_classified(
+                        a, w, cpad, self.dram[v], self.ssd[v],
+                        int(self.ways_dram[v]), int(self.ways_ssd[v]),
+                        self._byp, self._lo_d[v], self._hi_d[v],
+                        self._lo_s[v], self._hi_s[v],
+                        mode=cfg.mode, t0=int(self.t[v]))
             self.t[v] = int(t_end)
             _acc(self.stats[v], st)
 
@@ -487,11 +585,20 @@ class EticaCache:
                                 cfg.promo_interval, cfg.prefetch)
         for win in source.windows():
             subs = win.subs
+            # 0) IO classification: one fused dispatch per window, the
+            # sequential-run carry threaded across windows per VM
+            cls_subs = None
+            if self.classifier is not None:
+                cls_subs, self._cls_end, self._cls_len = \
+                    self.classifier.classify_subs(subs, self._cls_end,
+                                                  self._cls_len)
             # 1) POD sizing + PPC partitioning at both levels (§4.3)
             alloc_d, dem_d, _ = self._size_level(
-                subs, Policy.RO, cfg.geometry_dram, cfg.dram_capacity)
+                subs, Policy.RO, cfg.geometry_dram, cfg.dram_capacity,
+                cls_subs)
             alloc_s, dem_s, _ = self._size_level(
-                subs, Policy.WBWO, cfg.geometry_ssd, cfg.ssd_capacity)
+                subs, Policy.WBWO, cfg.geometry_ssd, cfg.ssd_capacity,
+                cls_subs)
             self.logs_dram.append(IntervalLog(dem_d, alloc_d))
             self.logs_ssd.append(IntervalLog(dem_s, alloc_s))
             # 2) resize both levels (shrinking flushes dirty blocks)
@@ -520,21 +627,31 @@ class EticaCache:
             for v in range(self.num_vms):
                 alloc_hist[v].append(int(alloc_d[v] + alloc_s[v]))
             self.ways_dram, self.ways_ssd = wd, ws
+            # class -> sub-partition way ranges for the new allocations
+            if self.classifier is not None:
+                self._lo_d, self._hi_d = self.classifier.way_bounds(wd)
+                self._lo_s, self._hi_s = self.classifier.way_bounds(ws)
             # 3) datapath simulation in promo-interval chunks + maintenance
             if cfg.batched:
                 # [V, chunk] blocks from the source (device-put one block
                 # ahead of the simulator when prefetch is on)
-                for a, w, kth in win.blocks():
-                    self._run_chunk_batched(a, w, kth)
+                for k, (a, w, kth) in enumerate(win.blocks()):
+                    cmat = (None if cls_subs is None else
+                            _cls_chunk(cls_subs, k, cfg.promo_interval))
+                    self._run_chunk_batched(a, w, kth, cmat)
                     if cfg.mode == "full":
-                        self._maintain_all(kth)
+                        mth = (kth if cls_subs is None else _strip_bypass(
+                            kth, cls_subs, k, cfg.promo_interval, self._byp))
+                        self._maintain_all(mth)
             else:
                 chunk_lists = win.chunk_lists()
                 for k in range(max(map(len, chunk_lists), default=0)):
                     kth = [c[k] if k < len(c) else None for c in chunk_lists]
-                    self._run_chunk_sequential(kth)
+                    self._run_chunk_sequential(kth, cls_subs, k)
                     if cfg.mode == "full":
-                        for v, chunk in enumerate(kth):
+                        mth = (kth if cls_subs is None else _strip_bypass(
+                            kth, cls_subs, k, cfg.promo_interval, self._byp))
+                        for v, chunk in enumerate(mth):
                             if chunk is not None:
                                 self._maintain_seq(v, chunk)
         return [VMResult(dict(self.stats[v]),
@@ -555,6 +672,7 @@ class SingleLevelConfig:
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
     prefetch: bool = True            # double-buffer host->device blocks
+    classifier: object | None = None  # repro.classify.Classifier | None
 
 
 MetricFn = Callable[[Trace], tuple[int, np.ndarray, np.ndarray]]
@@ -629,6 +747,10 @@ class PartitionedSingleLevelCache:
         self.t = np.zeros(num_vms, np.int32)
         self.stats = [dict() for _ in range(num_vms)]
         self.logs: list[IntervalLog] = []
+        self.classifier = cfg.classifier
+        if self.classifier is not None:
+            self._cls_end, self._cls_len = self.classifier.init_carry(num_vms)
+            self._byp = np.asarray(self.classifier.bypass, bool)
 
     def vm_cache(self, v: int) -> CacheState:
         return _vm_slice(self.caches, v) if self.cfg.batched else self.caches[v]
@@ -645,6 +767,18 @@ class PartitionedSingleLevelCache:
                                 cfg.sim_chunk, cfg.prefetch)
         for win in source.windows():
             subs = win.subs
+            # IO classification: bypass-class requests never reach the
+            # cache, so they are cut from the sizing/policy sub-traces
+            cls_subs = None
+            subs_sz = subs
+            if self.classifier is not None:
+                cls_subs, self._cls_end, self._cls_len = \
+                    self.classifier.classify_subs(subs, self._cls_end,
+                                                  self._cls_len)
+                wts = self.classifier.weights
+                keep = [wts[c] > 0 for c in cls_subs]
+                subs_sz = [s if m.all() else s[m]
+                           for s, m in zip(subs, keep)]
             demands = np.zeros(self.num_vms, np.int64)
             grid = _mrc_grid(cfg.geometry, cfg.mrc_points)
             curves = np.zeros((self.num_vms, grid.size))
@@ -655,11 +789,11 @@ class PartitionedSingleLevelCache:
                 # the dynamic policy choosers' read counts ride the same
                 # dispatch
                 dem, g_, cur, reads = self.metric.batch(
-                    [np.asarray(s.addr) for s in subs],
-                    [np.asarray(s.is_write) for s in subs],
+                    [np.asarray(s.addr) for s in subs_sz],
+                    [np.asarray(s.is_write) for s in subs_sz],
                     with_reads=True)
                 same_grid = np.array_equal(g_, grid)
-                for v, sub in enumerate(subs):
+                for v, sub in enumerate(subs_sz):
                     if len(sub) == 0:
                         continue
                     demands[v] = min(int(dem[v]), cfg.geometry.capacity)
@@ -667,7 +801,7 @@ class PartitionedSingleLevelCache:
                         grid, g_, cur[v])
             else:
                 metric_fn = getattr(self.metric, "ref", self.metric)
-                for v, sub in enumerate(subs):
+                for v, sub in enumerate(subs_sz):
                     if len(sub) == 0:
                         continue
                     d, g_, c_ = metric_fn(sub)
@@ -675,12 +809,16 @@ class PartitionedSingleLevelCache:
                     curves[v] = np.interp(grid, g_, c_)
             if batched_metric and isinstance(self.policy_fn, PolicyChooser):
                 policies = self.policy_fn.batch(reads,
-                                                [len(s) for s in subs])
+                                                [len(s) for s in subs_sz])
             else:
                 policies = [self.policy_fn(sub) if len(sub) else Policy.WB
-                            for sub in subs]
+                            for sub in subs_sz]
             res = _partition(demands, curves, grid, cfg.capacity)
-            counts = np.array([len(s) for s in subs], np.float64)
+            if cls_subs is None:
+                counts = np.array([len(s) for s in subs], np.float64)
+            else:
+                counts = np.array([wts[c].sum() for c in cls_subs],
+                                  np.float64)
             alloc = _expand_to_capacity(res.alloc, counts, cfg.capacity,
                                         cfg.geometry)
             self.logs.append(IntervalLog(demands, alloc,
@@ -705,13 +843,26 @@ class PartitionedSingleLevelCache:
                 alloc_hist[v].append(int(alloc[v]))
             self.ways = w_new
             flags = policy_flags(policies)
+            if cls_subs is not None:
+                # per-(VM, class) policy flags + insertion way ranges
+                flags_vc = _class_policy_flags(
+                    self.classifier.vm_policies(policies))
+                lo, hi = self.classifier.way_bounds(w_new)
             if cfg.batched:
                 # [V, chunk] blocks from the source (device-put one block
                 # ahead of the simulator when prefetch is on)
-                for a, wr, kth in win.blocks():
-                    self.caches, st, t_end = \
-                        simulator.simulate_single_level_batch(
-                            a, wr, self.caches, self.ways, flags, t0=self.t)
+                for k, (a, wr, kth) in enumerate(win.blocks()):
+                    if cls_subs is None:
+                        self.caches, st, t_end = \
+                            simulator.simulate_single_level_batch(
+                                a, wr, self.caches, self.ways, flags,
+                                t0=self.t)
+                    else:
+                        cmat = _cls_chunk(cls_subs, k, cfg.sim_chunk)
+                        self.caches, st, t_end = \
+                            simulator.simulate_single_level_classified_batch(
+                                a, wr, cmat, self.caches, self.ways,
+                                flags_vc, lo, hi, self._byp, t0=self.t)
                     self.t = np.asarray(t_end)
                     st = jax.device_get(st)
                     for v, chunk in enumerate(kth):
@@ -727,10 +878,23 @@ class PartitionedSingleLevelCache:
                         a, wr = _pad(np.asarray(chunk.addr, np.int32),
                                      np.asarray(chunk.is_write),
                                      cfg.sim_chunk)
-                        self.caches[v], st, t_end = \
-                            simulator.simulate_single_level(
-                                a, wr, self.caches[v], int(self.ways[v]),
-                                policies[v], t0=int(self.t[v]))
+                        if cls_subs is None:
+                            self.caches[v], st, t_end = \
+                                simulator.simulate_single_level(
+                                    a, wr, self.caches[v], int(self.ways[v]),
+                                    policies[v], t0=int(self.t[v]))
+                        else:
+                            seg = cls_subs[v][k * cfg.sim_chunk:
+                                              (k + 1) * cfg.sim_chunk]
+                            cpad = np.zeros(cfg.sim_chunk, np.int32)
+                            cpad[:len(seg)] = seg
+                            fv = simulator.PolicyFlags(
+                                *[np.asarray(f[v]) for f in flags_vc])
+                            self.caches[v], st, t_end = \
+                                simulator.simulate_single_level_classified(
+                                    a, wr, cpad, self.caches[v],
+                                    int(self.ways[v]), fv, lo[v], hi[v],
+                                    self._byp, t0=int(self.t[v]))
                         self.t[v] = int(t_end)
                         _acc(self.stats[v], st)
         return [VMResult(dict(self.stats[v]),

@@ -265,8 +265,8 @@ def _row_update(addr, val, waddr, contrib, n_valid, live, decay):
     dest_new = jnp.searchsorted(addr, new_sorted) + jnp.arange(
         n, dtype=jnp.int32)
     # destinations are disjoint and strictly increasing per stream; any
-    # entry pushed past K falls off the end (document: size K so the
-    # working set fits — table_len is the overflow telemetry)
+    # entry pushed past K falls off the end — counted below as the row's
+    # merge-overflow drops (surfaced via Stats.pop_drops)
     out_addr = jnp.full(k, TABLE_EMPTY, jnp.int32)
     out_val = jnp.zeros(k, jnp.float32)
     out_addr = out_addr.at[dest_table].set(addr, mode="drop")
@@ -276,13 +276,16 @@ def _row_update(addr, val, waddr, contrib, n_valid, live, decay):
         new_sorted, mode="drop")
     out_val = out_val.at[jnp.where(keep_new, dest_new, k)].set(
         new_val, mode="drop")
+    drops = (jnp.sum((addr != TABLE_EMPTY) & (dest_table >= k))
+             + jnp.sum(keep_new & (dest_new >= k))).astype(jnp.int32)
     return (jnp.where(live, out_addr, addr0),
-            jnp.where(live, out_val, val0))
+            jnp.where(live, out_val, val0),
+            jnp.where(live, drops, 0))
 
 
 @jax.jit
 def table_update(table: PopularityTable, waddr, contrib, n_valid,
-                 live, decay) -> PopularityTable:
+                 live, decay):
     """Merge one window of Eq. 1 contributions into every VM's table.
 
     ``waddr``/``contrib`` are ``[V, N]`` (entries at positions >=
@@ -290,12 +293,17 @@ def table_update(table: PopularityTable, waddr, contrib, n_valid,
     rows with ``live=False`` are untouched (no decay), exactly like the
     sequential path skipping a VM with an empty window. Bit-identical to
     calling :meth:`PopularityTracker.update` per live VM.
+
+    Returns ``(table, drops)`` where ``drops`` is the ``[V]`` int32 count
+    of entries pushed past the row's ``K`` slots by this merge (the
+    previously-silent overflow, surfaced as ``Stats.pop_drops``).
     """
-    return PopularityTable(*jax.vmap(
+    addr, val, drops = jax.vmap(
         _row_update, in_axes=(0, 0, 0, 0, 0, 0, None)
     )(table.addr, table.val, waddr, contrib,
       jnp.asarray(n_valid, jnp.int32), jnp.asarray(live, bool),
-      jnp.float32(decay)))
+      jnp.float32(decay))
+    return PopularityTable(addr, val), drops
 
 
 def _row_scores(addr_row, val_row, queries):

@@ -354,6 +354,19 @@ def hit_counts_at_sizes(dist, served, sizes) -> np.ndarray:
     return np.sum(d[None, :] < np.asarray(sizes)[:, None], axis=1, dtype=np.int64)
 
 
+def hit_counts_at_sizes_weighted(dist, served, sizes, weights) -> np.ndarray:
+    """:func:`hit_counts_at_sizes` with per-request sizing weights.
+
+    Used by the classified controllers: each request contributes its IO
+    class's ``weight`` to the hit curve instead of 1. With all-one
+    weights the float64 sums are exact integer counts, equal to the
+    unweighted path bit for bit.
+    """
+    d = np.where(np.asarray(served), np.asarray(dist), np.int32(2**30))
+    w = np.asarray(weights, np.float64)
+    return ((d[None, :] < np.asarray(sizes)[:, None]) * w[None, :]).sum(axis=1)
+
+
 def mrc(trace, policy: Policy, sizes: np.ndarray) -> np.ndarray:
     """Hit-ratio curve H(c) for the trace under ``policy`` at ``sizes``.
 

@@ -79,11 +79,15 @@ class Stats(NamedTuple):
     disk_reads: jax.Array
     disk_writes: jax.Array
     latency_sum: jax.Array     # seconds (float32)
+    # numpy scalar defaults: they carry a .dtype for the padding mask
+    # multiply without forcing JAX backend init at import time
+    bypassed: jax.Array = np.int32(0)    # classifier bypass channel
+    pop_drops: jax.Array = np.int32(0)   # popularity-table merge overflow
 
     @staticmethod
     def zero() -> "Stats":
         z = jnp.int32(0)
-        return Stats(z, z, z, z, z, z, z, z, jnp.float32(0.0))
+        return Stats(z, z, z, z, z, z, z, z, jnp.float32(0.0), z, z)
 
     def merge(self, o: "Stats") -> "Stats":
         return Stats(*[a + b for a, b in zip(self, o)])
@@ -199,6 +203,25 @@ def _insert(state: CacheState, s, addr, t, dirty, ways_active):
     """Insert a block; returns (state, evicted_valid, evicted_dirty)."""
     active = jnp.arange(state.tags.shape[1]) < ways_active
     can = ways_active > 0
+    way = _victim(state, s, active)
+    ev_valid = can & (state.tags[s, way] >= 0)
+    ev_dirty = ev_valid & state.dirty[s, way]
+    new = CacheState(
+        tags=state.tags.at[s, way].set(jnp.where(can, addr, state.tags[s, way])),
+        lru=state.lru.at[s, way].set(jnp.where(can, t, state.lru[s, way])),
+        dirty=state.dirty.at[s, way].set(jnp.where(can, dirty, state.dirty[s, way])),
+    )
+    return new, can, ev_valid, ev_dirty
+
+
+def _insert_range(state: CacheState, s, addr, t, dirty, way_lo, way_hi):
+    """:func:`_insert` restricted to the way range ``[way_lo, way_hi)`` —
+    the sub-partition slice an IO class may allocate into. With
+    ``way_lo == 0`` and ``way_hi == ways_active`` this is exactly
+    :func:`_insert`. An empty range means the class cannot allocate."""
+    idx = jnp.arange(state.tags.shape[1])
+    active = (idx >= way_lo) & (idx < way_hi)
+    can = way_hi > way_lo
     way = _victim(state, s, active)
     ev_valid = can & (state.tags[s, way] >= 0)
     ev_dirty = ev_valid & state.dirty[s, way]
@@ -447,6 +470,287 @@ def simulate_two_level_batch(addr, is_write, dram: CacheState,
     )(jnp.asarray(addr, jnp.int32), jnp.asarray(is_write), dram, ssd,
       jnp.asarray(ways_dram, jnp.int32), jnp.asarray(ways_ssd, jnp.int32),
       t0)
+
+
+# ---------------------------------------------------------------------------
+# classified datapath (IO-class sub-partitions — repro.classify)
+# ---------------------------------------------------------------------------
+#
+# The classified cores take a per-request class id ``cls`` alongside
+# ``addr``/``is_write`` and three per-class tables: way-range bounds
+# (``[C]`` per level — the sub-partition slice a class may allocate into),
+# per-class :class:`PolicyFlags` (single level only; the two-level
+# hierarchy keeps its fixed DRAM-RO / SSD-WBWO policies), and a ``[C]``
+# bypass mask. A bypass-class read goes straight to disk without touching
+# the cache; a bypass-class write goes straight to disk and drops (without
+# flushing) any cached copy, which the disk write supersedes. Both count
+# in the ``Stats.bypassed`` channel. Lookups stay global over the VM's
+# active ways — classes share residency, they only partition *insertion*.
+# With one match-all class (``lo = 0``, ``hi = ways_active``, no bypass)
+# every operation below folds to the unclassified step, so results are
+# bit-identical to the plain simulators.
+
+def _simulate_single_level_classified(addr, is_write, cls, state: CacheState,
+                                      ways_active, flags: PolicyFlags,
+                                      way_lo, way_hi, bypass, t_cache, t0):
+    """Unjitted classified single-level core: per-class policy flags
+    (``[C]`` fields), per-class way ranges, bypass mask."""
+    num_sets = state.tags.shape[0]
+    ways_active = jnp.asarray(ways_active, jnp.int32)
+    t_cache = jnp.float32(t_cache)
+    nc = way_lo.shape[0]
+    zero = jnp.int32(0)
+    one = jnp.int32(1)
+
+    def step(carry, req):
+        st0, stats, t = carry
+        a, w, c = req
+        valid = a >= 0
+        a = jnp.maximum(a, 0)
+        c = jnp.clip(c, 0, nc - 1)
+        fc = PolicyFlags(flags.allocates_reads[c], flags.write_invalidates[c],
+                         flags.holds_dirty[c], flags.write_through[c])
+        hi = jnp.minimum(way_hi[c], ways_active)
+        lo = jnp.minimum(way_lo[c], hi)
+        byp = bypass[c]
+        st = st0
+        s = a % num_sets
+        hit, way, active = _lookup(st, s, a, ways_active)
+
+        def on_read(st):
+            lat = jnp.where(hit, t_cache, jnp.float32(T_HDD))
+            st = jax.lax.cond(hit, lambda cc: _touch(cc, s, way, t, False),
+                              lambda cc: cc, st)
+            do_alloc = (~hit) & fc.allocates_reads
+            st2, ins, _, ev_dirty = _insert_range(st, s, a, t, False, lo, hi)
+            st = jax.tree_util.tree_map(
+                lambda x, y: jnp.where(do_alloc, y, x), st, st2)
+            cw = jnp.where(do_alloc & ins, one, zero)
+            dw = jnp.where(do_alloc & ins & ev_dirty, one, zero)
+            return st, Stats(one, zero, zero, hit.astype(jnp.int32), zero, cw,
+                             (~hit).astype(jnp.int32), dw, lat, zero, zero)
+
+        def on_write(st):
+            inval = fc.write_invalidates
+            st_ro = _invalidate(st, s, way, hit & inval)
+            mark_dirty = fc.holds_dirty
+            st_hit = _touch(st, s, way, t, mark_dirty)
+            st_ins, ins, _, ev_dirty = _insert_range(st, s, a, t, mark_dirty,
+                                                     lo, hi)
+            st_alloc = jax.tree_util.tree_map(
+                lambda h, i: jnp.where(hit, h, i), st_hit, st_ins)
+            st = jax.tree_util.tree_map(
+                lambda r, al: jnp.where(inval, r, al), st_ro, st_alloc)
+            committed = hit | ins
+            cw = jnp.where(inval, zero, committed.astype(jnp.int32))
+            wh = jnp.where(inval, zero, hit.astype(jnp.int32))
+            sync = fc.write_through.astype(jnp.int32)
+            dw_alloc = sync + jnp.where((~hit) & ins & ev_dirty, one, zero) \
+                + jnp.where(~committed, one, zero)
+            dw = jnp.where(inval, one, dw_alloc)
+            lat_alloc = jnp.where(
+                committed,
+                jnp.where(fc.write_through, jnp.float32(T_HDD_WRITE),
+                          t_cache),
+                jnp.float32(T_HDD_WRITE))
+            lat = jnp.where(inval, jnp.float32(T_HDD_WRITE), lat_alloc)
+            return st, Stats(zero, one, zero, zero, wh, cw, zero, dw, lat,
+                             zero, zero)
+
+        def on_bypass(st):
+            st = _invalidate(st, s, way, hit & w)
+            rd = jnp.where(w, zero, one)
+            wr = jnp.where(w, one, zero)
+            lat = jnp.where(w, jnp.float32(T_HDD_WRITE), jnp.float32(T_HDD))
+            return st, Stats(rd, wr, zero, zero, zero, zero, rd, wr, lat,
+                             one, zero)
+
+        st, ds = jax.lax.cond(
+            byp, on_bypass,
+            lambda cc: jax.lax.cond(w, on_write, on_read, cc), st)
+        st = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), st, st0)
+        ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
+        return (st, stats.merge(ds), t + valid.astype(jnp.int32)), None
+
+    (state, stats, t_end), _ = jax.lax.scan(
+        step, (state, Stats.zero(), jnp.asarray(t0, jnp.int32)),
+        (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
+         jnp.asarray(cls, jnp.int32)))
+    return state, stats, t_end
+
+
+@jax.jit
+def simulate_single_level_classified(addr, is_write, cls, state: CacheState,
+                                     ways_active, flags: PolicyFlags,
+                                     way_lo, way_hi, bypass,
+                                     t_cache=T_SSD, t0=0):
+    """Classified :func:`simulate_single_level`: ``cls`` is a per-request
+    ``[N]`` class id, ``flags`` fields / ``way_lo`` / ``way_hi`` /
+    ``bypass`` are ``[C]`` per-class tables."""
+    return _simulate_single_level_classified(
+        addr, is_write, cls, state, ways_active, flags,
+        jnp.asarray(way_lo, jnp.int32), jnp.asarray(way_hi, jnp.int32),
+        jnp.asarray(bypass, bool), t_cache, t0)
+
+
+@jax.jit
+def simulate_single_level_classified_batch(addr, is_write, cls,
+                                           state: CacheState, ways_active,
+                                           flags: PolicyFlags,
+                                           way_lo, way_hi, bypass,
+                                           t_cache=T_SSD, t0=0):
+    """Batched classified single level: ``addr``/``is_write``/``cls`` are
+    ``[V, N]``, ``flags`` fields and way bounds are ``[V, C]``, ``bypass``
+    is a shared ``[C]`` mask."""
+    v = jnp.shape(addr)[0]
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    return jax.vmap(
+        _simulate_single_level_classified,
+        in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, None, 0)
+    )(jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
+      jnp.asarray(cls, jnp.int32), state, jnp.asarray(ways_active, jnp.int32),
+      flags, jnp.asarray(way_lo, jnp.int32), jnp.asarray(way_hi, jnp.int32),
+      jnp.asarray(bypass, bool), jnp.float32(t_cache), t0)
+
+
+def _simulate_two_level_classified(addr, is_write, cls, dram: CacheState,
+                                   ssd: CacheState, ways_dram, ways_ssd,
+                                   bypass, lo_d, hi_d, lo_s, hi_s,
+                                   mode: str, t0):
+    """Unjitted classified two-level core: per-class way ranges for both
+    levels plus the bypass mask; policies stay DRAM-RO / SSD-WBWO."""
+    assert mode in ("full", "npe")
+    ns_d = dram.tags.shape[0]
+    ns_s = ssd.tags.shape[0]
+    ways_dram = jnp.asarray(ways_dram, jnp.int32)
+    ways_ssd = jnp.asarray(ways_ssd, jnp.int32)
+    nc = bypass.shape[0]
+    zero = jnp.int32(0)
+    one = jnp.int32(1)
+
+    def step(carry, req):
+        dr0, ss0, stats, t = carry
+        a, w, c = req
+        valid = a >= 0
+        a = jnp.maximum(a, 0)
+        c = jnp.clip(c, 0, nc - 1)
+        d_hi = jnp.minimum(hi_d[c], ways_dram)
+        d_lo = jnp.minimum(lo_d[c], d_hi)
+        s_hi = jnp.minimum(hi_s[c], ways_ssd)
+        s_lo = jnp.minimum(lo_s[c], s_hi)
+        byp = bypass[c]
+        dr, ss = dr0, ss0
+        sd = a % ns_d
+        s2 = a % ns_s
+        d_hit, d_way, _ = _lookup(dr, sd, a, ways_dram)
+        s_hit, s_way, _ = _lookup(ss, s2, a, ways_ssd)
+
+        def on_read(dr, ss):
+            lat = jnp.where(d_hit, jnp.float32(T_DRAM),
+                            jnp.where(s_hit, jnp.float32(T_SSD),
+                                      jnp.float32(T_HDD)))
+            dr = jax.lax.cond(d_hit, lambda c_: _touch(c_, sd, d_way, t, False),
+                              lambda c_: c_, dr)
+            ss = jax.lax.cond(s_hit & ~d_hit,
+                              lambda c_: _touch(c_, s2, s_way, t, False),
+                              lambda c_: c_, ss)
+            dr_ins, _, _, _ = _insert_range(dr, sd, a, t, False, d_lo, d_hi)
+            promote = ~d_hit
+            dr = jax.tree_util.tree_map(
+                lambda x, y: jnp.where(promote, y, x), dr, dr_ins)
+            return dr, ss, Stats(
+                one, zero, d_hit.astype(jnp.int32),
+                (s_hit & ~d_hit).astype(jnp.int32), zero, zero,
+                (~(d_hit | s_hit)).astype(jnp.int32), zero, lat, zero, zero)
+
+        def on_write(dr, ss):
+            dr = _invalidate(dr, sd, d_way, d_hit)
+            ss_hit_st = _touch(ss, s2, s_way, t, True)
+            if mode == "npe":
+                ss_ins, ins, _, ev_dirty = _insert_range(ss, s2, a, t, True,
+                                                         s_lo, s_hi)
+                ss = jax.tree_util.tree_map(
+                    lambda h, i: jnp.where(s_hit, h, i), ss_hit_st, ss_ins)
+                committed = s_hit | ins
+                cw = committed.astype(jnp.int32)
+                dw = jnp.where((~s_hit) & ins & ev_dirty, one, zero) \
+                    + jnp.where(~committed, one, zero)
+                lat = jnp.where(committed, jnp.float32(T_SSD),
+                                jnp.float32(T_HDD_WRITE))
+            else:  # full: SSD miss -> straight to disk
+                ss = jax.tree_util.tree_map(
+                    lambda h, i: jnp.where(s_hit, h, i), ss_hit_st, ss)
+                cw = s_hit.astype(jnp.int32)
+                dw = (~s_hit).astype(jnp.int32)
+                lat = jnp.where(s_hit, jnp.float32(T_SSD),
+                                jnp.float32(T_HDD_WRITE))
+            return dr, ss, Stats(zero, one, zero, zero,
+                                 s_hit.astype(jnp.int32), cw, zero, dw, lat,
+                                 zero, zero)
+
+        def on_bypass(dr, ss):
+            dr = _invalidate(dr, sd, d_way, d_hit & w)
+            ss = _invalidate(ss, s2, s_way, s_hit & w)
+            rd = jnp.where(w, zero, one)
+            wr = jnp.where(w, one, zero)
+            lat = jnp.where(w, jnp.float32(T_HDD_WRITE), jnp.float32(T_HDD))
+            return dr, ss, Stats(rd, wr, zero, zero, zero, zero, rd, wr, lat,
+                                 one, zero)
+
+        dr, ss, ds = jax.lax.cond(
+            byp, on_bypass,
+            lambda d_, s_: jax.lax.cond(w, on_write, on_read, d_, s_),
+            dr, ss)
+        dr = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), dr, dr0)
+        ss = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(valid, new, old), ss, ss0)
+        ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
+        return (dr, ss, stats.merge(ds), t + valid.astype(jnp.int32)), None
+
+    (dram, ssd, stats, t_end), _ = jax.lax.scan(
+        step, (dram, ssd, Stats.zero(), jnp.asarray(t0, jnp.int32)),
+        (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
+         jnp.asarray(cls, jnp.int32)))
+    return dram, ssd, stats, t_end
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def simulate_two_level_classified(addr, is_write, cls, dram: CacheState,
+                                  ssd: CacheState, ways_dram, ways_ssd,
+                                  bypass, lo_d, hi_d, lo_s, hi_s,
+                                  mode: str = "full", t0=0):
+    """Classified :func:`simulate_two_level`: per-request ``[N]`` class
+    ids, per-class ``[C]`` way bounds per level, ``[C]`` bypass mask."""
+    return _simulate_two_level_classified(
+        addr, is_write, cls, dram, ssd, ways_dram, ways_ssd,
+        jnp.asarray(bypass, bool),
+        jnp.asarray(lo_d, jnp.int32), jnp.asarray(hi_d, jnp.int32),
+        jnp.asarray(lo_s, jnp.int32), jnp.asarray(hi_s, jnp.int32), mode, t0)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def simulate_two_level_classified_batch(addr, is_write, cls,
+                                        dram: CacheState, ssd: CacheState,
+                                        ways_dram, ways_ssd, bypass,
+                                        lo_d, hi_d, lo_s, hi_s,
+                                        mode: str = "full", t0=0):
+    """Batched classified two level: ``addr``/``is_write``/``cls`` are
+    ``[V, N]``, way bounds are ``[V, C]``, ``bypass`` is shared ``[C]``."""
+    v = jnp.shape(addr)[0]
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    return jax.vmap(
+        lambda a, w, c, dr, ss, wd, ws, ld, hd, ls, hs, tt:
+            _simulate_two_level_classified(
+                a, w, c, dr, ss, wd, ws, jnp.asarray(bypass, bool),
+                ld, hd, ls, hs, mode, tt),
+        in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+    )(jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
+      jnp.asarray(cls, jnp.int32), dram, ssd,
+      jnp.asarray(ways_dram, jnp.int32), jnp.asarray(ways_ssd, jnp.int32),
+      jnp.asarray(lo_d, jnp.int32), jnp.asarray(hi_d, jnp.int32),
+      jnp.asarray(lo_s, jnp.int32), jnp.asarray(hi_s, jnp.int32), t0)
 
 
 # ---------------------------------------------------------------------------

@@ -20,10 +20,12 @@ class Trace:
     addr: np.ndarray        # int32 [N] block addresses
     is_write: np.ndarray    # bool  [N]
     vm: np.ndarray | None = None  # int32 [N] (optional)
+    size: np.ndarray | None = None  # int32 [N] request size in blocks
+                                    # (optional; absent means 1 block each)
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
-        return (self.addr, self.is_write, self.vm), None
+        return (self.addr, self.is_write, self.vm, self.size), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -38,7 +40,14 @@ class Trace:
             addr=self.addr[sl],
             is_write=self.is_write[sl],
             vm=None if self.vm is None else self.vm[sl],
+            size=None if self.size is None else self.size[sl],
         )
+
+    def sizes(self) -> np.ndarray:
+        """Request sizes in blocks; all-ones when no size channel."""
+        if self.size is None:
+            return np.ones(len(self), np.int32)
+        return np.asarray(self.size, np.int32)
 
     @property
     def n_reads(self) -> int:
@@ -54,7 +63,9 @@ class Trace:
         bit-identical to calling this per VM); this stays as its oracle."""
         assert self.vm is not None
         m = np.asarray(self.vm) == vm_id
-        return Trace(np.asarray(self.addr)[m], np.asarray(self.is_write)[m])
+        return Trace(np.asarray(self.addr)[m], np.asarray(self.is_write)[m],
+                     size=None if self.size is None
+                     else np.asarray(self.size)[m])
 
     def intervals(self, interval: int) -> Iterator["Trace"]:
         """Yield consecutive fixed-size request windows (paper: 10k reqs)."""
@@ -66,10 +77,14 @@ class Trace:
         vm = None
         if all(t.vm is not None for t in traces):
             vm = np.concatenate([np.asarray(t.vm) for t in traces])
+        size = None
+        if any(t.size is not None for t in traces):
+            size = np.concatenate([t.sizes() for t in traces])
         return Trace(
             addr=np.concatenate([np.asarray(t.addr) for t in traces]),
             is_write=np.concatenate([np.asarray(t.is_write) for t in traces]),
             vm=vm,
+            size=size,
         )
 
     @staticmethod
@@ -101,9 +116,12 @@ def split_by_vm(window: Trace, num_vms: int) -> list[Trace]:
     order = np.argsort(vm, kind="stable")
     addr = np.asarray(window.addr)[order]
     is_write = np.asarray(window.is_write)[order]
+    size = None if window.size is None else np.asarray(window.size)[order]
     bounds = np.searchsorted(vm[order], np.arange(num_vms + 1))
     return [Trace(addr[bounds[v]:bounds[v + 1]],
-                  is_write[bounds[v]:bounds[v + 1]])
+                  is_write[bounds[v]:bounds[v + 1]],
+                  size=None if size is None
+                  else size[bounds[v]:bounds[v + 1]])
             for v in range(num_vms)]
 
 
@@ -132,11 +150,17 @@ def interleave(traces: list[Trace], seed: int = 0) -> Trace:
     vm_stream = np.repeat(np.arange(len(traces)), lengths)
     rng.shuffle(vm_stream)
     cursors = [0] * len(traces)
+    has_size = any(t.size is not None for t in traces)
+    sizes = [t.sizes() for t in traces] if has_size else None
     addr = np.empty(sum(lengths), dtype=np.int32)
     is_write = np.empty(sum(lengths), dtype=bool)
+    size = np.empty(sum(lengths), dtype=np.int32) if has_size else None
     for i, v in enumerate(vm_stream):
         t = traces[v]
         addr[i] = t.addr[cursors[v]]
         is_write[i] = t.is_write[cursors[v]]
+        if has_size:
+            size[i] = sizes[v][cursors[v]]
         cursors[v] += 1
-    return Trace(addr=addr, is_write=is_write, vm=vm_stream.astype(np.int32))
+    return Trace(addr=addr, is_write=is_write, vm=vm_stream.astype(np.int32),
+                 size=size)

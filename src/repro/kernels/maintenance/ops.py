@@ -152,7 +152,7 @@ def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
     # 1) Eq. 1 popularity refresh, straight into the [V, K] device table
     contrib = pop.contributions(dist, served,
                                 jnp.maximum(alloc, 1)[:, None])
-    table = pop.table_update(table, waddr, contrib, nval, live, decay)
+    table, drops = pop.table_update(table, waddr, contrib, nval, live, decay)
 
     # 2) eviction queue (bottom-frac of residents when >= 90% full) ->
     #    evict kernel
@@ -175,7 +175,7 @@ def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
                                    jnp.asarray(t, jnp.int32), ts=ts,
                                    qc=min(qc, pqueue.shape[1]),
                                    dedupe=False, interpret=interpret)
-    return ssd, table, flushed, promoted, eqlen, pqlen
+    return ssd, table, flushed, promoted, eqlen, pqlen, drops
 
 
 def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
@@ -199,8 +199,10 @@ def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
       evict_frac/decay: §4.2.1 bottom-fraction and aging factor.
 
     Returns ``(ssd, table, flushed[V], promoted[V], evict_qlen[V],
-    promo_qlen[V])`` — states and table stay on device; the count
-    vectors are the only thing a caller needs to sync for Stats.
+    promo_qlen[V], pop_drops[V])`` — states and table stay on device; the
+    count vectors are the only thing a caller needs to sync for Stats.
+    ``pop_drops`` is the number of popularity entries pushed past the
+    table's ``K`` slots by this merge (``Stats.pop_drops``).
     """
     interpret = use_interpret() if interpret is None else interpret
     return _maintenance_impl(

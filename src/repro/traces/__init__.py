@@ -1,11 +1,11 @@
-from .generators import (SPECS, WorkloadSpec, generate, generate_to_store,
-                         make, make_store, names)
+from .generators import (SCAN_HEAVY_MIX, SPECS, WorkloadSpec, generate,
+                         generate_to_store, make, make_store, names)
 from .store import TraceStore, parse_blktrace, parse_msr_csv
 from .stream import StreamingTraceSource, StreamWindow, window_source
 
 __all__ = [
-    "SPECS", "WorkloadSpec", "generate", "generate_to_store", "make",
-    "make_store", "names",
+    "SCAN_HEAVY_MIX", "SPECS", "WorkloadSpec", "generate",
+    "generate_to_store", "make", "make_store", "names",
     "TraceStore", "parse_blktrace", "parse_msr_csv",
     "StreamingTraceSource", "StreamWindow", "window_source",
 ]

@@ -50,6 +50,15 @@ class WorkloadSpec:
                                     # writes — the pollution that penalizes
                                     # push-mode caches, paper §4.2)
     run_length: int = 64            # blocks per sequential run
+    seq_interleaved: bool = False   # emit the sequential part as contiguous
+                                    # runs spliced into the random stream
+                                    # (adjacency survives, so run-length
+                                    # rules / seq-cutoff can see the scans;
+                                    # plain `sequential` permutes arrivals)
+    big_fraction: float = 0.0       # fraction of requests issued at
+                                    # big_size blocks (mixed-block-size
+                                    # workloads -> Trace.size channel)
+    big_size: int = 8               # blocks per "big" request
 
 
 def _zipf_ranks(rng: np.random.Generator, n: int, size: int, a: float):
@@ -62,6 +71,8 @@ def _zipf_ranks(rng: np.random.Generator, n: int, size: int, a: float):
 
 def generate(spec: WorkloadSpec, n: int, seed: int = 0,
              addr_offset: int = 0) -> Trace:
+    if spec.seq_interleaved and spec.sequential > 0:
+        return _generate_seq_interleaved(spec, n, seed, addr_offset)
     rng = np.random.default_rng(seed)
     addr = np.zeros(n, np.int64)
     is_write = rng.random(n) >= spec.read_ratio
@@ -120,7 +131,71 @@ def generate(spec: WorkloadSpec, n: int, seed: int = 0,
                     addr[i] = addr[j]
 
     return Trace(addr=(addr + addr_offset).astype(np.int32),
-                 is_write=is_write)
+                 is_write=is_write,
+                 size=_draw_sizes(spec, n, rng))
+
+
+def _draw_sizes(spec: WorkloadSpec, n: int,
+                rng: np.random.Generator) -> np.ndarray | None:
+    """Mixed-block-size channel: ``big_fraction`` of requests at
+    ``big_size`` blocks, the rest at 1. ``None`` (no size channel, the
+    all-ones convention) when the spec is single-size — existing
+    workloads are byte-identical to before."""
+    if spec.big_fraction <= 0 or n == 0:
+        return None
+    size = np.ones(n, np.int32)
+    k = int(n * spec.big_fraction)
+    if k:
+        size[rng.choice(n, size=k, replace=False)] = spec.big_size
+    return size
+
+
+def _generate_seq_interleaved(spec: WorkloadSpec, n: int, seed: int,
+                              addr_offset: int) -> Trace:
+    """Contiguous sequential runs spliced into the random stream.
+
+    The base generator permutes arrival order, which destroys the
+    address adjacency run-length rules key on; here the random part is
+    generated as usual (``sequential=0``) and whole runs of
+    ``run_length`` contiguous blocks — one direction per run, fresh
+    address space, gaps between runs so they never merge — are inserted
+    at sorted random cut points, preserving both streams' internal
+    order."""
+    run_len = max(spec.run_length, 1)
+    num_runs = int(n * spec.sequential) // run_len
+    n_seq = num_runs * run_len
+    n_rand = n - n_seq
+    base = dataclasses.replace(spec, sequential=0.0, seq_interleaved=False)
+    rnd = generate(base, n_rand, seed=seed, addr_offset=0)
+    rng = np.random.default_rng(seed + 1)   # splice stream, decoupled
+                                            # from the random part's seed
+    scan_base = spec.working_set + 4 * n    # clear of cold/burst ranges
+    out_a = [np.asarray(rnd.addr, np.int64)]
+    out_w = [np.asarray(rnd.is_write)]
+    out_s = [rnd.sizes().astype(np.int32)]
+    if num_runs:
+        cuts = np.sort(rng.integers(0, n_rand + 1, num_runs))
+        run_write = rng.random(num_runs) >= spec.read_ratio
+        out_a, out_w, out_s = [], [], []
+        prev = 0
+        for r in range(num_runs):
+            c = int(cuts[r])
+            out_a.append(np.asarray(rnd.addr[prev:c], np.int64))
+            out_w.append(np.asarray(rnd.is_write[prev:c]))
+            out_s.append(rnd.sizes()[prev:c].astype(np.int32))
+            start = scan_base + r * (run_len + 64)   # gap: runs never chain
+            out_a.append(np.arange(start, start + run_len, dtype=np.int64))
+            out_w.append(np.full(run_len, run_write[r]))
+            out_s.append(np.ones(run_len, np.int32))
+            prev = c
+        out_a.append(np.asarray(rnd.addr[prev:], np.int64))
+        out_w.append(np.asarray(rnd.is_write[prev:]))
+        out_s.append(rnd.sizes()[prev:].astype(np.int32))
+    addr = np.concatenate(out_a)
+    is_write = np.concatenate(out_w)
+    size = np.concatenate(out_s) if rnd.size is not None else None
+    return Trace(addr=(addr + addr_offset).astype(np.int32),
+                 is_write=is_write, size=size)
 
 
 # -- named families ---------------------------------------------------------
@@ -159,7 +234,25 @@ SPECS: dict[str, WorkloadSpec] = {
                                  sequential=1.0, cold_fraction=0.0),
     "varmail": WorkloadSpec(read_ratio=0.5, working_set=4096, zipf_a=1.1,
                             raw_fraction=0.25),
+    # scan-heavy / mixed-block families (classification workloads): the
+    # sequential part is emitted as contiguous runs (seq_interleaved) so
+    # run-length rules and the sequential-cutoff bypass can see the scans
+    "scan_mix": WorkloadSpec(read_ratio=0.85, working_set=1024, zipf_a=1.4,
+                             sequential=0.6, run_length=96,
+                             seq_interleaved=True),
+    "backup_scan": WorkloadSpec(read_ratio=0.15, working_set=1024,
+                                zipf_a=1.3, sequential=0.7, run_length=128,
+                                seq_interleaved=True),
+    "mixed_block": WorkloadSpec(read_ratio=0.7, working_set=2048, zipf_a=1.3,
+                                sequential=0.3, run_length=64,
+                                seq_interleaved=True, big_fraction=0.25,
+                                big_size=8),
 }
+
+# the classification benchmarks' default multi-VM mix: two scan-heavy
+# streams next to two reuse-friendly victims whose working sets the
+# scans would otherwise flush
+SCAN_HEAVY_MIX = ["scan_mix", "hm_1", "backup_scan", "src2_0"]
 
 
 def make(name: str, n: int, seed: int = 0, addr_offset: int = 0,

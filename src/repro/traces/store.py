@@ -12,6 +12,8 @@ one column file per channel:
       shard_00000.addr.npy       # int32  [n]  block addresses
       shard_00000.w.npy          # bool   [n]  write flags
       shard_00000.vm.npy         # int32  [n]  vm ids (multi-VM stores only)
+      shard_00000.sz.npy         # int32  [n]  request sizes in blocks
+                                 #             (sized stores only)
       shard_00001.addr.npy
       ...
 
@@ -76,6 +78,7 @@ class _Meta:
     shards: list[int]               # per-shard lengths
     has_vm: bool
     num_vms: int | None             # max vm id + 1 (None for vm-less stores)
+    has_size: bool = False          # optional request-size column (blocks)
 
     @property
     def total(self) -> int:
@@ -97,6 +100,7 @@ class TraceStore:
         self._buf_addr: list[np.ndarray] = []
         self._buf_w: list[np.ndarray] = []
         self._buf_vm: list[np.ndarray] = []
+        self._buf_sz: list[np.ndarray] = []
         self._buffered = 0
 
     # -- lifecycle ---------------------------------------------------------
@@ -125,7 +129,8 @@ class TraceStore:
             raise ValueError(f"unsupported store version {raw.get('version')}")
         meta = _Meta(int(raw["shard_size"]), [int(n) for n in raw["shards"]],
                      bool(raw["has_vm"]),
-                     None if raw["num_vms"] is None else int(raw["num_vms"]))
+                     None if raw["num_vms"] is None else int(raw["num_vms"]),
+                     bool(raw.get("has_size", False)))
         return cls(path, meta, writable=(mode == "a"))
 
     def __enter__(self) -> "TraceStore":
@@ -147,12 +152,18 @@ class TraceStore:
             return
         self._absorb_tail()
         has_vm = trace.vm is not None
+        has_size = trace.size is not None
         if self._meta.total == 0 and self._buffered == 0:
             self._meta.has_vm = has_vm
+            self._meta.has_size = has_size
         elif has_vm != self._meta.has_vm:
             raise ValueError("cannot mix vm-tagged and vm-less appends")
+        elif has_size != self._meta.has_size:
+            raise ValueError("cannot mix sized and size-less appends")
         self._buf_addr.append(np.asarray(trace.addr, np.int32))
         self._buf_w.append(np.asarray(trace.is_write, bool))
+        if has_size:
+            self._buf_sz.append(np.asarray(trace.size, np.int32))
         if has_vm:
             vm = np.asarray(trace.vm, np.int32)
             if vm.size and vm.min() < 0:
@@ -185,6 +196,9 @@ class TraceStore:
         if self._meta.has_vm:
             np.save(_shard_file(self.path, i, "vm"),
                     self._take(self._buf_vm, k))
+        if self._meta.has_size:
+            np.save(_shard_file(self.path, i, "sz"),
+                    self._take(self._buf_sz, k))
         self._meta.shards.append(k)
         self._buffered -= k
 
@@ -198,6 +212,8 @@ class TraceStore:
             self._buf_w = [np.array(tail.is_write, bool)]
             if self._meta.has_vm:
                 self._buf_vm = [np.array(tail.vm, np.int32)]
+            if self._meta.has_size:
+                self._buf_sz = [np.array(tail.size, np.int32)]
             self._buffered = len(tail)
             self._meta.shards.pop()
 
@@ -212,6 +228,7 @@ class TraceStore:
                        "shards": self._meta.shards,
                        "has_vm": self._meta.has_vm,
                        "num_vms": self._meta.num_vms,
+                       "has_size": self._meta.has_size,
                        "total": self._meta.total}, f, indent=1)
 
     def close(self) -> None:
@@ -245,6 +262,10 @@ class TraceStore:
     def num_vms(self) -> int | None:
         return self._meta.num_vms
 
+    @property
+    def has_size(self) -> bool:
+        return self._meta.has_size
+
     def shard(self, i: int) -> Trace:
         """Shard ``i`` as a Trace of memory-mapped (read-only) arrays."""
         self._check_readable()
@@ -252,7 +273,9 @@ class TraceStore:
         w = np.load(_shard_file(self.path, i, "w"), mmap_mode="r")
         vm = (np.load(_shard_file(self.path, i, "vm"), mmap_mode="r")
               if self._meta.has_vm else None)
-        return Trace(addr=addr, is_write=w, vm=vm)
+        sz = (np.load(_shard_file(self.path, i, "sz"), mmap_mode="r")
+              if self._meta.has_size else None)
+        return Trace(addr=addr, is_write=w, vm=vm, size=sz)
 
     def iter_shards(self) -> Iterator[Trace]:
         for i in range(self.num_shards):
@@ -273,7 +296,9 @@ class TraceStore:
                 break
         if not parts:
             return Trace(np.empty(0, np.int32), np.empty(0, bool),
-                         np.empty(0, np.int32) if self._meta.has_vm else None)
+                         np.empty(0, np.int32) if self._meta.has_vm else None,
+                         np.empty(0, np.int32) if self._meta.has_size
+                         else None)
         return Trace.concat(parts) if len(parts) > 1 else parts[0]
 
     def iter_windows(self, window: int) -> Iterator[Trace]:

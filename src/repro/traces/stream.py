@@ -101,6 +101,7 @@ class _DemuxedShard:
     is_write: np.ndarray        # [n]
     gidx: np.ndarray            # [n] ascending global index per VM segment
     bounds: np.ndarray          # [num_vms + 1] VM segment boundaries
+    size: np.ndarray | None = None  # [n] request sizes (sized stores only)
 
     @classmethod
     def demux(cls, shard: Trace, base: int, num_vms: int) -> "_DemuxedShard":
@@ -110,16 +111,20 @@ class _DemuxedShard:
         return cls(base=base, length=len(shard),
                    addr=np.asarray(shard.addr, np.int32)[order],
                    is_write=np.asarray(shard.is_write, bool)[order],
-                   gidx=(base + order).astype(np.int64), bounds=bounds)
+                   gidx=(base + order).astype(np.int64), bounds=bounds,
+                   size=(None if shard.size is None
+                         else np.asarray(shard.size, np.int32)[order]))
 
     def vm_part(self, v: int, start: int, stop: int):
-        """This shard's (addr, is_write) for VM ``v`` restricted to global
-        request range ``[start, stop)`` — a binary search, no scan."""
+        """This shard's (addr, is_write, size) for VM ``v`` restricted to
+        global request range ``[start, stop)`` — a binary search, no
+        scan. ``size`` is ``None`` for size-less stores."""
         lo, hi = int(self.bounds[v]), int(self.bounds[v + 1])
         g = self.gidx[lo:hi]
         a = int(np.searchsorted(g, start))
         b = int(np.searchsorted(g, stop))
-        return self.addr[lo + a: lo + b], self.is_write[lo + a: lo + b]
+        return (self.addr[lo + a: lo + b], self.is_write[lo + a: lo + b],
+                None if self.size is None else self.size[lo + a: lo + b])
 
 
 @dataclasses.dataclass
@@ -157,7 +162,9 @@ class StreamingTraceSource:
         total = len(store)
         active: deque[_DemuxedShard] = deque()
         shard_idx, loaded = 0, 0
-        empty = (np.empty(0, np.int32), np.empty(0, bool))
+        sized = store.has_size
+        empty = (np.empty(0, np.int32), np.empty(0, bool),
+                 np.empty(0, np.int32) if sized else None)
         for i, ws in enumerate(range(0, total, self.window)):
             we = min(ws + self.window, total)
             while loaded < we:            # one stable sort per shard, once
@@ -172,12 +179,16 @@ class StreamingTraceSource:
                 parts = [d.vm_part(v, ws, we) for d in active]
                 parts = [p for p in parts if p[0].size]
                 if not parts:
-                    subs.append(Trace(*empty))
+                    subs.append(Trace(empty[0], empty[1], size=empty[2]))
                 elif len(parts) == 1:
-                    subs.append(Trace(parts[0][0], parts[0][1]))
+                    subs.append(Trace(parts[0][0], parts[0][1],
+                                      size=parts[0][2]))
                 else:
-                    subs.append(Trace(np.concatenate([p[0] for p in parts]),
-                                      np.concatenate([p[1] for p in parts])))
+                    subs.append(Trace(
+                        np.concatenate([p[0] for p in parts]),
+                        np.concatenate([p[1] for p in parts]),
+                        size=(np.concatenate([p[2] for p in parts])
+                              if sized else None)))
             yield StreamWindow(i, subs, self.chunk, self.prefetch)
 
     # -- on-disk, no vm channel (single-stream convention) -----------------

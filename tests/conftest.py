@@ -4,8 +4,9 @@ The property tests use ``hypothesis`` when it is installed (CI installs it
 via ``requirements-dev.txt``). Environments without it — the tier-1
 command must run everywhere — get a minimal deterministic stand-in that
 implements exactly the surface these tests use (``given``, ``settings``,
-and the ``integers``/``booleans``/``tuples``/``lists``/``map`` strategy
-combinators). The stand-in draws from a fixed-seed numpy generator, so
+the ``integers``/``booleans``/``tuples``/``lists``/``none``/``just``/
+``sampled_from``/``one_of``/``builds``/``map`` strategy combinators and
+``composite``). The stand-in draws from a fixed-seed numpy generator, so
 runs are reproducible; it performs no shrinking.
 """
 from __future__ import annotations
@@ -49,6 +50,36 @@ except ModuleNotFoundError:
 
         return _Strategy(draw)
 
+    def none():
+        return _Strategy(lambda rng: None)
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(
+            lambda rng: options[int(rng.integers(0, len(options)))])
+
+    def one_of(*strategies):
+        return _Strategy(
+            lambda rng: strategies[int(rng.integers(0,
+                                                    len(strategies)))]
+            ._draw(rng))
+
+    def builds(target, *args, **kwargs):
+        def draw(rng):
+            return target(*[s._draw(rng) for s in args],
+                          **{k: s._draw(rng) for k, s in kwargs.items()})
+        return _Strategy(draw)
+
+    def composite(fn):
+        def make(*args, **kwargs):
+            def draw_all(rng):
+                return fn(lambda s: s._draw(rng), *args, **kwargs)
+            return _Strategy(draw_all)
+        return make
+
     def settings(max_examples=None, deadline=None, **_kw):
         def deco(fn):
             fn._stub_settings = {"max_examples": max_examples}
@@ -81,6 +112,12 @@ except ModuleNotFoundError:
     strategies_mod.booleans = booleans
     strategies_mod.tuples = tuples
     strategies_mod.lists = lists
+    strategies_mod.none = none
+    strategies_mod.just = just
+    strategies_mod.sampled_from = sampled_from
+    strategies_mod.one_of = one_of
+    strategies_mod.builds = builds
+    strategies_mod.composite = composite
     stub.strategies = strategies_mod
     stub.__is_stub__ = True
     sys.modules["hypothesis"] = stub

@@ -1,0 +1,246 @@
+"""Property tests for the IO-classification subsystem.
+
+Three layers, matching the package convention:
+
+  1. the vectorized rule engine (:func:`classify_block`, one fused jnp
+     dispatch over ``[V, N]`` blocks with per-VM sequential-run carry)
+     against the scalar per-request oracle :func:`classify_ref`, on
+     random rule sets and random request blocks — class ids and carries
+     bit-identical, including across window splits;
+  2. the controllers with a single match-all class against
+     ``classifier=None`` — per-VM Stats bit-identical on both the
+     two-level ETICA controller and the one-level chassis, batched and
+     sequential;
+  3. bypass semantics: a bypass class never allocates (the cache stays
+     empty under an always-bypass classifier) and its traffic is
+     surfaced through the new ``Stats.bypassed`` channel.
+"""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.classify import (ClassRule, Classifier, IOClass, classify_block,
+                            classify_ref, compile_rules, match_all,
+                            seq_cutoff)
+from repro.core import (EticaCache, EticaConfig, Geometry, Policy,
+                        make_centaur)
+from repro.core.trace import Trace
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+GEO = Geometry(num_sets=8, max_ways=16)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+def _interval(lo_max, width_max):
+    return st.one_of(
+        st.none(),
+        st.tuples(st.integers(0, lo_max), st.integers(1, width_max)).map(
+            lambda t: (t[0], t[0] + t[1])),
+        st.tuples(st.integers(0, lo_max)).map(lambda t: (t[0], None)),
+        st.tuples(st.integers(1, lo_max)).map(lambda t: (None, t[0])),
+    )
+
+
+rules = st.builds(ClassRule,
+                  size=_interval(8, 8),
+                  lba=_interval(600, 400),
+                  run_len=_interval(96, 64),
+                  direction=st.sampled_from([None, "read", "write"]))
+
+io_classes = st.builds(IOClass,
+                       name=st.just("c"),
+                       rules=st.lists(rules, min_size=0, max_size=3),
+                       bypass=st.booleans())
+
+
+@st.composite
+def rule_sets(draw):
+    """A valid class list: default first (never bypass), 1-4 others."""
+    default = IOClass("default",
+                      rules=tuple(draw(st.lists(rules, max_size=2))))
+    rest = draw(st.lists(io_classes, min_size=0, max_size=4))
+    return [default, *rest]
+
+
+@st.composite
+def blocks(draw):
+    """Random ``[V, N]`` request blocks with some sequential structure."""
+    v = draw(st.integers(1, 3))
+    n = draw(st.integers(0, 70))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    addr = rng.integers(0, 800, (v, n))
+    size = rng.integers(1, 9, (v, n))
+    # splice contiguous continuations so run_len rules actually fire
+    for row in range(v):
+        i = 1
+        while i < n:
+            if rng.random() < 0.5:
+                addr[row, i] = addr[row, i - 1] + size[row, i - 1]
+            i += 1
+    return (addr.astype(np.int64), rng.random((v, n)) < 0.4,
+            size.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# 1. vectorized engine == scalar oracle
+# ---------------------------------------------------------------------------
+
+@given(rule_sets(), blocks(), st.integers(0, 60))
+@settings(**SETTINGS)
+def test_classify_block_matches_ref(classes, block, split):
+    plan = compile_rules(classes)
+    addr, is_write, size = block
+    v, n = addr.shape
+    lens = np.full(v, n, np.int32)
+    ce = np.full(v, -1, np.int32)
+    cl = np.zeros(v, np.int32)
+    cls, ce2, cl2 = classify_block(addr, is_write, size, lens, ce, cl, plan)
+    cls, ce2, cl2 = np.asarray(cls), np.asarray(ce2), np.asarray(cl2)
+    for row in range(v):
+        want, we, wr = classify_ref(addr[row], is_write[row], size[row], plan)
+        assert np.array_equal(cls[row], want), (row, cls[row], want)
+        assert ce2[row] == we and cl2[row] == wr
+
+    # window-split equivalence: carry threads runs across the cut
+    k = min(split, n)
+    c1, e1, l1 = classify_block(addr[:, :k], is_write[:, :k], size[:, :k],
+                                np.full(v, k, np.int32), ce, cl, plan)
+    c2, e2, l2 = classify_block(addr[:, k:], is_write[:, k:], size[:, k:],
+                                np.full(v, n - k, np.int32),
+                                np.asarray(e1), np.asarray(l1), plan)
+    joined = np.concatenate([np.asarray(c1), np.asarray(c2)], axis=1)
+    assert np.array_equal(joined, cls)
+    assert np.array_equal(np.asarray(e2), ce2)
+    assert np.array_equal(np.asarray(l2), cl2)
+
+
+@given(blocks(), st.integers(1, 128))
+@settings(**SETTINGS)
+def test_classifier_subs_matches_trace_ref(block, threshold):
+    """Classifier.classify_subs (padded-bucket dispatch over ragged
+    sub-traces) == the scalar per-trace oracle, carries included."""
+    addr, is_write, size = block
+    c = seq_cutoff(threshold)
+    subs = [Trace(addr=addr[i].astype(np.int32), is_write=is_write[i],
+                  size=size[i].astype(np.int32))
+            for i in range(addr.shape[0])]
+    ce, cl = c.init_carry(len(subs))
+    got, ce2, cl2 = c.classify_subs(subs, ce, cl)
+    for i, sub in enumerate(subs):
+        want, we, wr = c.classify_trace_ref(sub)
+        assert np.array_equal(got[i], want)
+        assert ce2[i] == we and cl2[i] == wr
+
+
+# ---------------------------------------------------------------------------
+# 2. match-all class == unclassified, bit for bit
+# ---------------------------------------------------------------------------
+
+def _mix(seed=0, v=3, n=3000):
+    rng = np.random.default_rng(seed)
+    return Trace(addr=rng.integers(0, 300, n).astype(np.int32),
+                 is_write=rng.random(n) < 0.4,
+                 vm=rng.integers(0, v, n).astype(np.int32)), v
+
+
+def _etica(classifier, v, batched):
+    cfg = EticaConfig(dram_capacity=48, ssd_capacity=96, geometry_dram=GEO,
+                      geometry_ssd=GEO, resize_interval=1000,
+                      promo_interval=250, batched=batched,
+                      classifier=classifier)
+    return EticaCache(cfg, v)
+
+
+def _chassis(classifier, v, batched):
+    return make_centaur(96, v, geometry=GEO, resize_interval=1000,
+                        sim_chunk=250, batched=batched,
+                        classifier=classifier)
+
+
+@given(st.integers(0, 2**31 - 1), st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_match_all_bit_identical(seed, batched):
+    trace, v = _mix(seed)
+    for build in (_etica, _chassis):
+        base = build(None, v, batched).run(trace)
+        ma = build(match_all(), v, batched).run(trace)
+        for r0, r1 in zip(base, ma):
+            assert r0.stats == r1.stats
+            assert np.array_equal(r0.alloc_history, r1.alloc_history)
+
+
+def test_classified_batched_matches_sequential():
+    """seq-cutoff engaged (scans long enough to trip it): the classified
+    batched datapath == the classified sequential oracle on both
+    controllers, and requests actually bypass."""
+    trace, v = _mix(7)
+    runs = [np.arange(50_000 + i * 500, 50_000 + i * 500 + 64,
+                      dtype=np.int32) for i in range(30)]
+    seq = np.concatenate(runs)
+    big = Trace(addr=np.concatenate([np.asarray(trace.addr), seq]),
+                is_write=np.concatenate([np.asarray(trace.is_write),
+                                         np.zeros(len(seq), bool)]),
+                vm=np.concatenate([np.asarray(trace.vm),
+                                   np.full(len(seq), 0, np.int32)]))
+    c = seq_cutoff(32)
+    for build in (_etica, _chassis):
+        rb = build(c, v, True).run(big)
+        rs = build(c, v, False).run(big)
+        for r0, r1 in zip(rb, rs):
+            assert r0.stats == r1.stats
+        assert rb[0].stats["bypassed"] == 30 * (64 - 32 + 1)
+
+
+# ---------------------------------------------------------------------------
+# 3. bypass never allocates
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_bypass_class_never_allocates(seed, batched):
+    """An always-bypass classifier: every request bypasses, nothing is
+    ever inserted (no cache writes, no hits), all traffic goes to disk."""
+    trace, v = _mix(seed, n=1500)
+    bypass_all = Classifier([
+        IOClass("default"),
+        IOClass("void", rules=(ClassRule(),), bypass=True),
+    ])
+    for build in (_etica, _chassis):
+        res = build(bypass_all, v, batched).run(trace)
+        for r in res:
+            s = r.stats
+            assert s["bypassed"] == s["reads"] + s["writes"]
+            assert s["read_hits_l1"] == s["read_hits_l2"] == 0
+            assert s["write_hits_l2"] == 0
+            assert s["cache_writes_l2"] == 0
+            assert s["disk_reads"] == s["reads"]
+            assert s["disk_writes"] >= s["writes"]
+
+
+def test_way_bounds_partitioning():
+    """Explicit ways_frac classes carve exclusive top slices in class
+    order; pool classes share the remainder; bypass classes get none."""
+    c = Classifier([
+        IOClass("default"),
+        IOClass("a", ways_frac=0.25),
+        IOClass("b", ways_frac=0.5),
+        IOClass("skip", rules=(ClassRule(run_len=(8, None)),), bypass=True),
+    ])
+    lo, hi = c.way_bounds(np.asarray([16, 0], np.int32))
+    assert lo[0].tolist() == [0, 12, 4, 0]
+    assert hi[0].tolist() == [4, 16, 12, 0]
+    assert lo[1].tolist() == hi[1].tolist() == [0, 0, 0, 0]
+
+
+def test_policy_override_per_class():
+    c = Classifier([IOClass("default"),
+                    IOClass("wt", policy=Policy.WT)])
+    pol = c.vm_policies([Policy.WB, Policy.RO])
+    assert pol[0] == [Policy.WB, Policy.WT]
+    assert pol[1] == [Policy.RO, Policy.WT]

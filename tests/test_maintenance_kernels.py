@@ -208,13 +208,63 @@ def test_popularity_table_matches_tracker(num_vms, steps, seed):
             contrib[v, :n] = np.float32(
                 [c / 100.0 for _, c in step_ops[:n]])
             trackers[v].update(waddr[v, :n], contrib[v, :n])
-        table = pop.table_update(table, waddr, contrib, nval, live, 0.5)
+        table, _ = pop.table_update(table, waddr, contrib, nval, live, 0.5)
     ta, tv = np.asarray(table.addr), np.asarray(table.val)
     for v in range(num_vms):
         occupied = ta[v] != pop.TABLE_EMPTY
         assert np.array_equal(ta[v][occupied],
                               trackers[v]._addr.astype(np.int32))
         assert np.array_equal(tv[v][occupied], trackers[v]._val)
+
+
+@given(st.integers(1, 8), st.integers(1, 32), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_popularity_merge_overflow_drops(k, d, seed):
+    """Overflowing a K-entry table with D distinct addresses reports
+    exactly ``max(D - K, 0)`` merge drops and keeps ``min(D, K)``
+    entries; a second full-table update drops every new address."""
+    rng = np.random.default_rng(seed)
+    table = pop.table_init(1, k)
+    addrs = rng.choice(1000, size=d, replace=False).astype(np.int32)
+    contrib = (rng.random(d) + 0.01).astype(np.float32)
+    nval = np.asarray([d], np.int32)
+    live = np.asarray([True])
+    table, drops = pop.table_update(table, addrs[None], contrib[None],
+                                    nval, live, 0.5)
+    assert int(np.asarray(drops)[0]) == max(d - k, 0)
+    assert int(np.asarray(pop.table_len(table))[0]) == min(d, k)
+    if d >= k:
+        # table is full: a disjoint batch must drop all its survivors
+        fresh = (addrs + 1000)[:d]
+        _, drops2 = pop.table_update(table, fresh[None], contrib[None],
+                                     nval, live, 0.5)
+        assert int(np.asarray(drops2)[0]) == d
+
+
+def test_maintenance_interval_surfaces_pop_drops():
+    """The fused interval's 7-tuple carries the merge-drop counter:
+    a 4-entry popularity table fed 16 distinct addresses drops 12."""
+    from repro.core import reuse
+    from repro.core.policies import Policy
+
+    rng = np.random.default_rng(7)
+    num_vms, s, w = 2, 4, 4
+    st_ = _random_state(rng, num_vms, s, w, addr_space=32,
+                        set_consistent=True)
+    table = pop.table_init(num_vms, 4)
+    addrs = [np.arange(16, dtype=np.int32), np.arange(2, dtype=np.int32)]
+    writes = [np.zeros(16, bool), np.zeros(2, bool)]
+    lens = [16, 2]
+    amat, wmat = reuse._pad_rows(addrs, writes, list(range(num_vms)), lens)
+    r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
+                                 sizing_reads_only=False, chunk=256)
+    *_, drops = ops.maintenance_interval(
+        st_, table, r.dist, r.served, amat, np.asarray(lens, np.int32),
+        np.full(num_vms, w, np.int32), np.zeros(num_vms, np.int32),
+        evict_frac=0.25, decay=0.5, interpret=True)
+    drops = np.asarray(drops)
+    assert drops[0] == 12   # 16 distinct into capacity 4
+    assert drops[1] == 0    # 2 distinct fit
 
 
 @given(st.integers(1, 3), st.integers(0, 2**31 - 1))
@@ -231,9 +281,9 @@ def test_popularity_queues_match_tracker(num_vms, seed):
         contrib = rng.random((num_vms, 16)).astype(np.float32)
         for v in range(num_vms):
             trackers[v].update(waddr[v], contrib[v])
-        table = pop.table_update(table, waddr, contrib,
-                                 np.full(num_vms, 16, np.int32),
-                                 np.ones(num_vms, bool), 0.5)
+        table, _ = pop.table_update(table, waddr, contrib,
+                                    np.full(num_vms, 16, np.int32),
+                                    np.ones(num_vms, bool), 0.5)
     st_ = _random_state(rng, num_vms, s, w, addr_space=30,
                         set_consistent=True)
     ways = rng.integers(0, w + 1, num_vms).astype(np.int32)
@@ -297,11 +347,13 @@ def test_fused_interval_matches_staged_host_reference(num_vms, seed):
     amat, wmat = reuse._pad_rows(addrs, writes, list(range(num_vms)), lens)
     r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                  sizing_reads_only=False, chunk=256)
-    got_ssd, got_table, flushed, promoted, eqlen, pqlen = \
+    got_ssd, got_table, flushed, promoted, eqlen, pqlen, drops = \
         ops.maintenance_interval(
             st_, table, r.dist, r.served, amat,
             np.asarray(lens, np.int32), ways, t,
             evict_frac=0.25, decay=0.5, interpret=True)
+    # 128-entry table over a 32-address space: merge never overflows
+    assert np.asarray(drops).sum() == 0
 
     # staged host reference
     tags = np.asarray(st_.tags).copy()

@@ -17,7 +17,11 @@ Checks, over README.md and docs/*.md:
   4. the maintenance-pipeline docs stay wired up: docs/architecture.md
      links the ``kernels/maintenance`` package (kernel + ops) and the
      README module map names ``kernels/maintenance/``, for a package
-     that actually exists on disk.
+     that actually exists on disk;
+  5. the IO-classification docs stay wired up: docs/architecture.md
+     links both classify modules (``classify/rules.py`` and
+     ``classify/classifier.py``) and the README module map names
+     ``classify/``, for a package that actually exists on disk.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -116,6 +120,26 @@ def check_maintenance_docs() -> list[str]:
     return problems
 
 
+def check_classification_docs() -> list[str]:
+    problems = []
+    pkg = ROOT / "src/repro/classify"
+    for mod in ("rules.py", "classifier.py", "__init__.py"):
+        if not (pkg / mod).exists():
+            problems.append(f"src/repro/classify/{mod} missing "
+                            "(docs describe the IO-classification package)")
+    readme = (ROOT / "README.md").read_text()
+    if "`classify/`" not in readme:
+        problems.append("README.md: module map does not name classify/")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        targets = set(LINK_RE.findall(arch.read_text()))
+        for mod in ("classify/rules.py", "classify/classifier.py"):
+            if not any(t.endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: classification "
+                                f"module {mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -127,6 +151,7 @@ def main() -> int:
     problems.extend(check_verify_command())
     problems.extend(check_streaming_docs())
     problems.extend(check_maintenance_docs())
+    problems.extend(check_classification_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
