@@ -1,6 +1,6 @@
-"""Serving example: batched multi-tenant decode with the ETICA two-tier
-KV manager, real paged-attention decode steps, and the LRU baseline for
-comparison.
+"""Serving example: churn-driven multi-tenant decode with the ETICA
+two-tier KV manager, real paged-attention decode steps, and the LRU
+baseline for comparison.
 
     PYTHONPATH=src python examples/serve_two_tier.py
 """
@@ -12,12 +12,12 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    print("=== ETICA two-tier manager ===")
-    a = serve_main(["--manager", "etica", "--rounds", "200",
-                    "--sessions", "32", "--hbm-pages", "40"])
+    common = ["--events", "800", "--live", "48", "--hbm-pages", "40",
+              "--tenants", "3"]
+    print("=== ETICA two-tier manager (batched controller) ===")
+    a = serve_main(["--manager", "etica", *common])
     print("\n=== global-LRU write-back baseline ===")
-    b = serve_main(["--manager", "lru", "--rounds", "200",
-                    "--sessions", "32", "--hbm-pages", "40"])
+    b = serve_main(["--manager", "lru", *common])
     print(f"\nhost-DMA write reduction: "
           f"{1 - a['dma_write_bytes']/max(b['dma_write_bytes'],1):.1%}")
 

@@ -24,6 +24,23 @@ import numpy as np
 NEG = -1e30
 
 
+def size_grid(capacity: int, points: int = 16) -> np.ndarray:
+    """Ascending candidate-size grid ``0..capacity`` INCLUSIVE.
+
+    ``np.arange(0, capacity + 1, step)`` silently drops the ``capacity``
+    endpoint whenever ``capacity % step != 0``, which forbids the
+    partitioner from ever granting a tenant the whole pool; this helper
+    always appends the endpoint. ``points`` bounds the grid resolution
+    (``step = max(capacity // points, 1)``).
+    """
+    capacity = int(capacity)
+    step = max(capacity // max(points, 1), 1)
+    grid = np.arange(0, capacity + 1, step, dtype=np.int64)
+    if grid.size == 0 or grid[-1] != capacity:
+        grid = np.append(grid, np.int64(capacity))
+    return grid
+
+
 @dataclasses.dataclass
 class PartitionResult:
     alloc: np.ndarray       # int64 [V] blocks

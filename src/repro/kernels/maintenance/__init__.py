@@ -8,4 +8,5 @@ fused per-interval dispatch that chains popularity refresh, queue
 building, eviction and promotion into ONE jitted executable with no
 host round-trips between stages (``ops.maintenance_interval``).
 """
-from .ops import evict, promote, maintenance_interval  # noqa: F401
+from .ops import (evict, promote, maintenance_interval,  # noqa: F401
+                  serving_maintenance)

@@ -211,3 +211,120 @@ def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
         jnp.asarray(ways, jnp.int32), jnp.asarray(t, jnp.int32),
         evict_frac=float(evict_frac), decay=float(decay), ts=ts, qc=qc,
         interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# the fused per-interval dispatch for the two-tier KV serving workload
+# ---------------------------------------------------------------------------
+#
+# Serving sessions play the role of blocks (popularity is per session id)
+# and tenants play the role of VMs; the "cache state" is the HBM page
+# tables — per-tenant lists of resident sessions with their page counts —
+# rather than a [V, S, W] tag array. One maintenance interval is one
+# fused dispatch: Eq. 1 contributions over the mixed activation window,
+# per-tenant demux, the [T, K] popularity-table merge, candidate scoring
+# against the post-update table, and the cold-first eviction ranking that
+# turns per-tenant over-quota page counts into per-session release
+# counts. Only the final (order, take) queues and the updated table ever
+# reach the host, which applies the releases to its page-table dicts.
+
+@functools.partial(jax.jit, static_argnames=("num_tenants", "decay"))
+def _serving_impl(table: pop.PopularityTable, dist, served, waddr, wtenant,
+                  cand_sid, cand_pages, over, cache_size, *,
+                  num_tenants: int, decay: float):
+    t_axis, n = num_tenants, waddr.shape[0]
+
+    # 1) Eq. 1 contributions over the MIXED window (distances were
+    #    computed on the interleaved activation stream, exactly like the
+    #    sequential oracle's single pod_distances call)
+    contrib = pop.contributions(dist, served,
+                                jnp.maximum(cache_size, 1))
+
+    # 2) demux to [T, N] per-tenant rows, arrival order preserved: a
+    #    stable sort by tenant groups each tenant's entries, and each
+    #    entry's column is its rank within the group. Pad entries
+    #    (tenant = -1) route to row T and are dropped.
+    tn = jnp.where(wtenant >= 0, wtenant, t_axis).astype(jnp.int32)
+    order = jnp.argsort(tn, stable=True)
+    tn_sorted = tn[order]
+    starts = jnp.searchsorted(tn_sorted,
+                              jnp.arange(t_axis + 1, dtype=jnp.int32))
+    col = jnp.arange(n, dtype=jnp.int32) - starts[tn_sorted]
+    rows_addr = jnp.zeros((t_axis, n), jnp.int32).at[
+        tn_sorted, col].set(waddr[order], mode="drop")
+    rows_contrib = jnp.zeros((t_axis, n), jnp.float32).at[
+        tn_sorted, col].set(contrib[order], mode="drop")
+    n_valid = starts[1:] - starts[:-1]
+    live = n_valid > 0
+
+    # 3) [T, K] popularity merge (bit-identical to per-tenant
+    #    PopularityTracker.update, incl. the live-row-only decay)
+    table, drops = pop.table_update(table, rows_addr, rows_contrib,
+                                    n_valid, live, decay)
+
+    # 4) eviction ranking against the POST-update table: candidates are
+    #    the resident sessions per tenant in page-table (slot-insertion)
+    #    order; stable ascending argsort on their scores reproduces the
+    #    oracle's `sorted(resident, key=score)` cold-first order, and the
+    #    running page total turns the tenant's over-quota count into
+    #    per-session release counts (partial last session allowed).
+    valid = cand_sid >= 0
+    scores = pop.table_scores(table, jnp.where(valid, cand_sid, 0))
+    key = jnp.where(valid, scores, jnp.inf)
+    eorder = jnp.argsort(key, axis=1, stable=True)
+    pages_sorted = jnp.take_along_axis(
+        jnp.where(valid, cand_pages, 0), eorder, axis=1)
+    cum_before = jnp.cumsum(pages_sorted, axis=1) - pages_sorted
+    take = jnp.clip(over[:, None] - cum_before, 0, pages_sorted)
+    return table, drops, eorder.astype(jnp.int32), take.astype(jnp.int32)
+
+
+def serving_maintenance(table: pop.PopularityTable, dist, served, waddr,
+                        wtenant, cand_sid, cand_pages, over, cache_size,
+                        *, decay: float):
+    """One fused serving-maintenance interval for all tenants.
+
+    Args:
+      table: the ``[T, K]`` session-popularity
+        :class:`~repro.core.popularity.PopularityTable`.
+      dist/served: the mixed activation window's POD(RO) channels
+        (``[N]``, from ``reuse.pod_distances`` — the controller computes
+        them once for the interleaved stream, as the oracle does).
+      waddr: ``[N]`` session ids of the window, arrival order.
+      wtenant: ``[N]`` tenant of each entry (recorded at request time;
+        ``-1`` = padding).
+      cand_sid/cand_pages: ``[T, Smax]`` eviction candidates — resident
+        sessions per tenant in page-table insertion order with their
+        resident-page counts (``-1``/0 padding). The active session must
+        already be excluded by the caller.
+      over: ``[T]`` pages over quota per tenant (<= 0 -> no eviction).
+      cache_size: Eq. 1 normalizer (the controller passes the summed
+        tenant quotas).
+      decay: popularity aging factor.
+
+    Returns ``(table, pop_drops[T], order[T, Smax], take[T, Smax])``:
+    the updated device table, per-tenant merge-overflow drops, and the
+    eviction queue — ``order[t, i]`` indexes into ``cand_sid[t]``
+    coldest-first, ``take[t, i]`` is how many of that session's resident
+    pages to release (0 past the quota point). Inputs are padded to
+    power-of-two buckets so executables key on bucket sizes only.
+    """
+    n = int(np.shape(waddr)[0])
+    nb = _next_pow2(max(n, 64))
+    t_axis, smax = np.shape(cand_sid)
+    sb = _next_pow2(max(smax, 8))
+
+    def padn(x, fill, dtype):
+        x = jnp.asarray(x, dtype)
+        return jnp.pad(x, (0, nb - n), constant_values=fill)
+
+    cand_sid = jnp.pad(jnp.asarray(cand_sid, jnp.int32),
+                       ((0, 0), (0, sb - smax)), constant_values=-1)
+    cand_pages = jnp.pad(jnp.asarray(cand_pages, jnp.int32),
+                         ((0, 0), (0, sb - smax)), constant_values=0)
+    return _serving_impl(
+        table, padn(dist, -1, jnp.int32), padn(served, False, bool),
+        padn(waddr, 0, jnp.int32), padn(wtenant, -1, jnp.int32),
+        cand_sid, cand_pages, jnp.asarray(over, jnp.int32),
+        jnp.asarray(cache_size, jnp.float32),
+        num_tenants=t_axis, decay=float(decay))

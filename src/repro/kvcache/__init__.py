@@ -1,2 +1,3 @@
-from .manager import Session, Stats, TwoTierConfig, TwoTierKVManager
+from .manager import (Session, Stats, TwoTierConfig, TwoTierKVManager,
+                      quota_with_floor)
 from .baseline import GlobalLRUManager

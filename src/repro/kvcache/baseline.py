@@ -18,7 +18,9 @@ class GlobalLRUManager(TwoTierKVManager):
     """LRU + write-back eviction + no partitioning."""
 
     def __init__(self, cfg: TwoTierConfig, num_tenants: int):
-        super().__init__(cfg, num_tenants)
+        # controller is inert here (no maintenance), so skip the batched
+        # plane's device popularity table
+        super().__init__(cfg, num_tenants, batched=False)
         self._clock = 0
         self._slot_time: dict[int, int] = {}
 

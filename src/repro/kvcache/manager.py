@@ -17,9 +17,31 @@ pages. The same core machinery drives the policy:
     (`repro.core.reuse`), partitioned under pressure by PPC
     (`repro.core.partition`);
   * popularity (Eq. 1, `repro.core.popularity`) ranks sessions; the
-    periodic maintenance step promotes hot sessions' pages into HBM and
-    drops cold ones (pull mode — an activation miss copies pages up for
-    the active batch but does NOT count as a promotion decision).
+    periodic maintenance step drops cold sessions' pages (pull mode — an
+    activation miss copies pages up for the active batch but does NOT
+    count as a promotion decision).
+
+Controller architecture (the serving analog of the repo's batched
+convention): ``batched=True`` (default) runs the controller on the
+batched machinery of PRs 1–6 — a bounded ``[T, window]`` per-tenant
+trace ring, per-tenant sizing through ONE vmapped
+``reuse.pod_distances_batch`` dispatch per resize interval, and
+promotion/eviction over a device-resident ``[T, K]``
+:class:`~repro.core.popularity.PopularityTable` driven by the fused
+``kernels.maintenance.serving_maintenance`` dispatch (the HBM page
+tables are the cache state it ranks over). ``batched=False`` keeps the
+original host-dict controller — per-tenant
+:class:`~repro.core.popularity.PopularityTracker` loops and per-tenant
+``pod_distances`` calls — as the bit-identical sequential oracle:
+both paths produce the same Stats, quotas, and page placements
+request for request.
+
+The controller trace is *bounded*: requests are recorded into rings of
+``resize_interval`` entries (the only window any consumer ever reads),
+so a serving run's host memory is O(window + live pages), not O(total
+activations). Each entry snapshots the session's tenant at record time,
+so windows stay well-defined after churn (``end_session``) retires a
+session.
 
 The pools are jnp arrays compatible with
 `repro.kernels.decode_attention` page tables.
@@ -31,10 +53,12 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import popularity as core_pop
 from repro.core import reuse as core_reuse
-from repro.core.partition import partition as _partition
+from repro.core.partition import partition as _partition, size_grid
 from repro.core.policies import Policy
 from repro.core.popularity import PopularityTracker, contributions
+from repro.kernels.maintenance.ops import serving_maintenance
 
 PCIE_BW = 8e9            # bytes/s per host link (dma latency model)
 
@@ -52,6 +76,10 @@ class TwoTierConfig:
     promo_frac: float = 0.25
     evict_frac: float = 0.25
     popularity_decay: float = 0.5
+    pop_capacity: int = 256       # [T, K] popularity-table slots per tenant
+    materialize: bool = True      # keep device page pools in sync; off =
+                                  # controller-only mode for huge synthetic
+                                  # runs (Stats identical, no decode)
 
     @property
     def page_bytes(self) -> int:
@@ -72,37 +100,156 @@ class Session:
 class Stats:
     activations: int = 0
     hits: int = 0                  # fully HBM-resident activations
+    appends: int = 0               # pages generated (WBWO commits)
     dma_read_bytes: int = 0        # host -> HBM copies (misses, promotions)
     dma_write_bytes: int = 0       # HBM -> host commits (the wear analog)
     latency_s: float = 0.0
+    sessions_ended: int = 0        # churn: retired sessions
+    pop_drops: int = 0             # [T, K] table merge-overflow drops
 
     def as_dict(self):
         return dataclasses.asdict(self) | {
             "hit_ratio": self.hits / max(self.activations, 1)}
 
 
-class TwoTierKVManager:
-    """Host-side controller + device page pools."""
+class _TraceRing:
+    """Bounded controller-trace ring: the last ``window`` requests with
+    their session id, record-time tenant, and write flag — exactly the
+    slice ``_window()`` has always consumed, without the unbounded
+    ``trace_addr``/``trace_write`` lists (which leaked host memory
+    linearly in activations)."""
 
-    def __init__(self, cfg: TwoTierConfig, num_tenants: int):
+    def __init__(self, window: int):
+        self.window = window
+        self.sid = np.zeros(window, np.int32)
+        self.tenant = np.zeros(window, np.int32)
+        self.write = np.zeros(window, bool)
+        self.n = 0               # total records ever pushed
+
+    def push(self, sid: int, tenant: int, write: bool):
+        pos = self.n % self.window
+        self.sid[pos] = sid
+        self.tenant[pos] = tenant
+        self.write[pos] = write
+        self.n += 1
+
+    def arrays(self):
+        """(sid, tenant, write) of the last ``min(n, window)`` records in
+        chronological order."""
+        if self.n < self.window:
+            sl = slice(0, self.n)
+            return self.sid[sl], self.tenant[sl], self.write[sl]
+        pos = self.n % self.window
+        order = np.r_[pos:self.window, 0:pos]
+        return self.sid[order], self.tenant[order], self.write[order]
+
+
+class _TenantRings:
+    """``[T, window]`` per-tenant trace rings (batched controller).
+
+    Each request lands in its tenant's row together with its global
+    sequence number, so ``window_rows(cutoff)`` can reproduce exactly
+    the per-tenant sub-traces of "last ``window`` global records, masked
+    by tenant" — the oracle's semantics — without ever materializing an
+    unbounded global list."""
+
+    def __init__(self, num_tenants: int, window: int):
+        self.window = window
+        self.sid = np.zeros((num_tenants, window), np.int32)
+        self.write = np.zeros((num_tenants, window), bool)
+        self.seq = np.full((num_tenants, window), -1, np.int64)
+        self.count = np.zeros(num_tenants, np.int64)  # pushes per tenant
+
+    def push(self, tenant: int, sid: int, write: bool, seq: int):
+        pos = self.count[tenant] % self.window
+        self.sid[tenant, pos] = sid
+        self.write[tenant, pos] = write
+        self.seq[tenant, pos] = seq
+        self.count[tenant] += 1
+
+    def window_rows(self, min_seq: int):
+        """Per-tenant (sid, write) arrays of records with
+        ``seq >= min_seq``, each in chronological order."""
+        sids, writes = [], []
+        for t in range(self.seq.shape[0]):
+            n = int(min(self.count[t], self.window))
+            if n == 0:
+                sids.append(np.empty(0, np.int32))
+                writes.append(np.empty(0, bool))
+                continue
+            if self.count[t] < self.window:
+                order = np.arange(n)
+            else:
+                pos = int(self.count[t] % self.window)
+                order = np.r_[pos:self.window, 0:pos]
+            keep = self.seq[t, order] >= min_seq
+            sids.append(self.sid[t, order][keep])
+            writes.append(self.write[t, order][keep])
+        return sids, writes
+
+
+def quota_with_floor(alloc: np.ndarray, capacity: int) -> np.ndarray:
+    """Give every tenant >= 1 page WITHOUT exceeding the pool.
+
+    The old ``np.maximum(alloc, 1)`` could push ``sum(quota)`` above
+    ``capacity`` (every zero-allocation tenant added a page out of thin
+    air), letting tenants collectively pin more HBM than exists. Raising
+    a tenant to the 1-page floor is now paid for by shaving the largest
+    allocations, one page at a time (never below the floor)."""
+    alloc = np.asarray(alloc, np.int64).copy()
+    if capacity < alloc.size:       # pool smaller than tenant count:
+        alloc = np.minimum(alloc, 1)   # floor is unsatisfiable; best effort
+        while alloc.sum() > capacity:
+            alloc[np.argmax(alloc)] -= 1
+        return alloc
+    alloc = np.maximum(alloc, 1)
+    while alloc.sum() > capacity:
+        big = np.argmax(alloc)
+        if alloc[big] <= 1:
+            break
+        alloc[big] -= 1
+    return alloc
+
+
+class TwoTierKVManager:
+    """Host-side datapath (page tables, pools) + batched or sequential
+    controller (see module docstring)."""
+
+    def __init__(self, cfg: TwoTierConfig, num_tenants: int,
+                 batched: bool = True):
         self.cfg = cfg
         self.num_tenants = num_tenants
+        self.batched = batched
         shape = (cfg.hbm_pages, cfg.page_size, cfg.num_kv_heads,
                  cfg.head_dim)
         dt = jnp.dtype(cfg.dtype)
         # tier-1 device pools (per layer stacked on axis 0)
-        self.k_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
-        self.v_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
+        if cfg.materialize:
+            self.k_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
+            self.v_pool = jnp.zeros((cfg.num_layers,) + shape, dt)
+        else:
+            self.k_pool = self.v_pool = None
         self.free = list(range(cfg.hbm_pages))
         self.slot_owner: dict[int, tuple[int, int]] = {}  # slot -> (sid, lp)
         # tier-2 host pool: {(sid, logical_page): (k_np, v_np)}
         self.host: dict[tuple[int, int], tuple[np.ndarray, np.ndarray]] = {}
         self.sessions: dict[int, Session] = {}
-        # controller state
-        self.trace_addr: list[int] = []
-        self.trace_write: list[bool] = []
-        self.trackers = [PopularityTracker(cfg.popularity_decay)
-                         for _ in range(num_tenants)]
+        # controller state: bounded rings (the only trace anyone reads)
+        self._ring = _TraceRing(cfg.resize_interval)
+        if batched:
+            self._trings = _TenantRings(num_tenants, cfg.resize_interval)
+            self._table = core_pop.table_init(num_tenants, cfg.pop_capacity)
+            # host mirror of the device table, refreshed once per
+            # maintenance interval — serves the datapath's per-allocation
+            # score lookups without a device round-trip each
+            self._pop_addr = np.asarray(self._table.addr)
+            self._pop_val = np.asarray(self._table.val)
+            self.trackers = None
+        else:
+            self._trings = None
+            self._table = None
+            self.trackers = [PopularityTracker(cfg.popularity_decay)
+                             for _ in range(num_tenants)]
         self.tenant_quota = np.full(num_tenants,
                                     cfg.hbm_pages // max(num_tenants, 1))
         self.tenant_used = np.zeros(num_tenants, np.int64)
@@ -113,6 +260,18 @@ class TwoTierKVManager:
     # -- session lifecycle ------------------------------------------------
     def new_session(self, sid: int, tenant: int):
         self.sessions[sid] = Session(tenant=tenant)
+
+    def end_session(self, sid: int):
+        """Churn: the session leaves for good — release its HBM slots and
+        drop its authoritative tier-2 pages (no DMA: the host copies are
+        simply freed)."""
+        sess = self.sessions[sid]
+        for lp in list(sess.hbm_slots):
+            self._release_slot(sid, lp)
+        for lp in sess.pages:
+            self.host.pop((sid, lp), None)
+        del self.sessions[sid]
+        self.stats.sessions_ended += 1
 
     def _alloc_slot(self, sid: int, lp: int) -> int:
         if not self.free:
@@ -132,6 +291,28 @@ class TwoTierKVManager:
             self.free.append(slot)
             self.tenant_used[sess.tenant] -= 1
 
+    def _scores(self, tenants: np.ndarray, sids: np.ndarray) -> np.ndarray:
+        """Popularity of (tenant, sid) pairs — float32, bit-identical
+        between the tracker (sequential) and the device-table host
+        mirror (batched)."""
+        tenants = np.asarray(tenants)
+        sids = np.asarray(sids)
+        out = np.zeros(sids.shape, np.float32)
+        for t in np.unique(tenants):
+            m = tenants == t
+            if self.batched:
+                row_a, row_v = self._pop_addr[t], self._pop_val[t]
+                pos = np.searchsorted(row_a, sids[m].astype(np.int32))
+                pos_c = np.minimum(pos, row_a.size - 1)
+                hit = (pos < row_a.size) & (row_a[pos_c]
+                                            == sids[m].astype(np.int32))
+                vals = np.zeros(int(m.sum()), np.float32)
+                vals[hit] = row_v[pos_c[hit]]
+                out[m] = vals
+            else:
+                out[m] = self.trackers[int(t)].scores_for(sids[m])
+        return out
+
     def _evict_one(self, exclude_sid: int):
         """Drop the least-popular resident page (RO tier: no write-back).
 
@@ -140,15 +321,14 @@ class TwoTierKVManager:
                  if sid != exclude_sid]
         if not cands:
             raise RuntimeError("HBM pool exhausted by a single session")
-
-        def score(item):
-            _, sid, _ = item
-            sess = self.sessions[sid]
-            over = self.tenant_used[sess.tenant] - self.tenant_quota[sess.tenant]
-            pop = self.trackers[sess.tenant].score(sid)
-            return (-over, pop)  # most-over-quota, then least popular
-
-        slot, sid, lp = min(cands, key=score)
+        sids = np.array([sid for _, sid, _ in cands], np.int64)
+        tens = np.array([self.sessions[int(s)].tenant for s in sids],
+                        np.int64)
+        over = self.tenant_used[tens] - self.tenant_quota[tens]
+        pops = self._scores(tens, sids)
+        # min((-over, pop)) with first-encounter tie-break, vectorized
+        pick = int(np.lexsort((np.arange(len(cands)), pops, -over))[0])
+        slot, sid, lp = cands[pick]
         self._release_slot(sid, lp)
 
     # -- datapath ----------------------------------------------------------
@@ -164,16 +344,25 @@ class TwoTierKVManager:
         self.stats.activations += 1
         if not missing:
             self.stats.hits += 1
-        dt = self.k_pool.dtype
         for lp in missing:
             slot = self._alloc_slot(sid, lp)
-            k_np, v_np = self.host[(sid, lp)]
-            self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(k_np, dt))
-            self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_np, dt))
+            if self.cfg.materialize:
+                dt = self.k_pool.dtype
+                k_np, v_np = self.host[(sid, lp)]
+                self.k_pool = self.k_pool.at[:, slot].set(
+                    jnp.asarray(k_np, dt))
+                self.v_pool = self.v_pool.at[:, slot].set(
+                    jnp.asarray(v_np, dt))
             self.stats.dma_read_bytes += self.cfg.page_bytes
             self.stats.latency_s += self.cfg.page_bytes / PCIE_BW
         self._maintenance_tick(active_sid=sid)
-        return self.page_table(sid)
+        pt = self.page_table(sid)
+        # decode-time residency contract: maintenance above excluded the
+        # active session, so every page must be resident — a -1 here
+        # would read another session's KV in decode_attention
+        assert (pt >= 0).all(), \
+            f"activate({sid}): non-resident page in active page table"
+        return pt
 
     def append_page(self, sid: int, k_page: np.ndarray, v_page: np.ndarray):
         """Commit a freshly generated page: written once to the host pool
@@ -184,16 +373,24 @@ class TwoTierKVManager:
         sess.pages.append(lp)
         self.host[(sid, lp)] = (np.asarray(k_page), np.asarray(v_page))
         self.stats.dma_write_bytes += self.cfg.page_bytes
-        dt = self.k_pool.dtype
+        self.stats.appends += 1
         slot = self._alloc_slot(sid, lp)
-        self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(k_page, dt))
-        self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_page, dt))
-        sess.length = lp * self.cfg.page_size + k_page.shape[1]
+        if self.cfg.materialize:
+            dt = self.k_pool.dtype
+            self.k_pool = self.k_pool.at[:, slot].set(jnp.asarray(k_page, dt))
+            self.v_pool = self.v_pool.at[:, slot].set(jnp.asarray(v_page, dt))
+        sess.length = lp * self.cfg.page_size + np.shape(k_page)[1]
         self._record(sid, write=True)
 
     def page_table(self, sid: int) -> np.ndarray:
+        """Logical page -> HBM slot; ``-1`` marks a non-resident page.
+
+        (The old ``hbm_slots.get(lp, 0)`` silently aliased slot 0, so a
+        stale table would read another session's KV page; the sentinel
+        makes partial residency detectable, and :meth:`activate` asserts
+        full residency before handing the table to decode.)"""
         sess = self.sessions[sid]
-        return np.array([sess.hbm_slots.get(lp, 0) for lp in sess.pages],
+        return np.array([sess.hbm_slots.get(lp, -1) for lp in sess.pages],
                         np.int32)
 
     def deactivate(self, sid: int):
@@ -202,8 +399,10 @@ class TwoTierKVManager:
 
     # -- controller --------------------------------------------------------
     def _record(self, sid: int, write: bool):
-        self.trace_addr.append(sid)
-        self.trace_write.append(write)
+        tenant = self.sessions[sid].tenant
+        self._ring.push(sid, tenant, write)
+        if self.batched:
+            self._trings.push(tenant, sid, write, self._ring.n - 1)
         self._since_maint += 1
         self._since_resize += 1
 
@@ -211,68 +410,139 @@ class TwoTierKVManager:
         cfg = self.cfg
         if self._since_maint >= cfg.maintenance_interval:
             self._since_maint = 0
-            self._update_popularity()
-            self._evict_cold(exclude_sid=active_sid)
+            if self.batched:
+                self._maintain_batched(exclude_sid=active_sid)
+            else:
+                self._update_popularity()
+                self._evict_cold(exclude_sid=active_sid)
         if self._since_resize >= cfg.resize_interval:
             self._since_resize = 0
             self._repartition()
 
     def _window(self):
-        n = self.cfg.resize_interval
-        addr = np.asarray(self.trace_addr[-n:], np.int32)
-        wr = np.asarray(self.trace_write[-n:], bool)
-        return addr, wr
+        sid, tenant, wr = self._ring.arrays()
+        return sid, tenant, wr
 
+    def _resident_by_tenant(self, exclude_sid: int | None):
+        """Per-tenant resident sessions (page-table insertion order) and
+        their resident-page counts — the cache state both controller
+        paths rank for eviction."""
+        per: list[dict[int, int]] = [dict() for _ in range(self.num_tenants)]
+        for slot, (sid, lp) in self.slot_owner.items():
+            if sid == exclude_sid:
+                continue
+            t = self.sessions[sid].tenant
+            per[t][sid] = per[t].get(sid, 0) + 1
+        return per
+
+    # ---- sequential oracle path (host dicts + trackers) -----------------
     def _update_popularity(self):
-        addr, wr = self._window()
+        addr, tenant, wr = self._window()
         if addr.size == 0:
             return
         r = core_reuse.pod_distances(addr, wr, Policy.RO)
         contrib = np.asarray(contributions(
             r.dist, r.served, max(int(self.tenant_quota.sum()), 1)))
         for t in range(self.num_tenants):
-            mask = np.array([self.sessions[s].tenant == t if s in
-                             self.sessions else False for s in addr])
+            mask = tenant == t
             if mask.any():
-                self.trackers[t].update(addr[mask], contrib[mask])
+                self.trackers[t].update(addr[mask].astype(np.int64),
+                                        contrib[mask])
 
     def _evict_cold(self, exclude_sid: int | None = None):
         """Pull-mode eviction queue: drop the coldest resident sessions'
         pages down to quota (clean copies — no write-back). The actively
         decoding session is never a victim: its page table was just handed
         to the batch, so its slots must stay owned until deactivation."""
+        per = self._resident_by_tenant(exclude_sid)
         for t in range(self.num_tenants):
             over = self.tenant_used[t] - self.tenant_quota[t]
             if over <= 0:
                 continue
-            resident = {}
-            for slot, (sid, lp) in list(self.slot_owner.items()):
-                if self.sessions[sid].tenant == t and sid != exclude_sid:
-                    resident.setdefault(sid, []).append(lp)
-            order = sorted(resident, key=lambda s: self.trackers[t].score(s))
-            for sid in order:
-                for lp in resident[sid]:
+            resident = per[t]
+            sids = np.fromiter(resident.keys(), np.int64,
+                               count=len(resident))
+            scores = self._scores(np.full(sids.shape, t), sids)
+            order = np.argsort(scores, kind="stable")
+            for i in order:
+                sid = int(sids[i])
+                lps = [lp for lp in self.sessions[sid].hbm_slots]
+                for lp in lps:
                     if over <= 0:
                         break
                     self._release_slot(sid, lp)
                     over -= 1
 
-    def _repartition(self):
-        """POD(RO) per tenant over the activation window -> PPC split of
-        the HBM pool (paper §4.3 applied to pages)."""
-        addr, wr = self._window()
+    # ---- batched path (device table + fused dispatch) -------------------
+    def _maintain_batched(self, exclude_sid: int | None = None):
+        addr, tenant, wr = self._window()
         if addr.size == 0:
             return
-        demands = np.zeros(self.num_tenants, np.int64)
-        grid = np.arange(0, self.cfg.hbm_pages + 1,
-                         max(self.cfg.hbm_pages // 16, 1), dtype=np.int64)
-        curves = np.zeros((self.num_tenants, grid.size))
+        r = core_reuse.pod_distances(addr, wr, Policy.RO)
+        per = self._resident_by_tenant(exclude_sid)
+        smax = max((len(p) for p in per), default=0)
+        smax = max(smax, 1)
+        cand_sid = np.full((self.num_tenants, smax), -1, np.int32)
+        cand_pages = np.zeros((self.num_tenants, smax), np.int32)
+        for t, p in enumerate(per):
+            for i, (sid, n) in enumerate(p.items()):
+                cand_sid[t, i] = sid
+                cand_pages[t, i] = n
+        over = self.tenant_used - self.tenant_quota
+        self._table, drops, eorder, take = serving_maintenance(
+            self._table, r.dist, r.served, addr, tenant,
+            cand_sid, cand_pages, over,
+            max(int(self.tenant_quota.sum()), 1),
+            decay=self.cfg.popularity_decay)
+        # one host sync per interval: queues + table mirror
+        eorder = np.asarray(eorder)
+        take = np.asarray(take)
+        self._pop_addr = np.asarray(self._table.addr)
+        self._pop_val = np.asarray(self._table.val)
+        self.stats.pop_drops += int(np.asarray(drops).sum())
         for t in range(self.num_tenants):
-            mask = np.array([s in self.sessions
-                             and self.sessions[s].tenant == t for s in addr])
-            if not mask.any():
+            if over[t] <= 0:
                 continue
-            r = core_reuse.pod_distances(addr[mask], wr[mask], Policy.RO)
+            for i in range(eorder.shape[1]):
+                pos = int(eorder[t, i])
+                k = int(take[t, i])
+                if k <= 0 or pos >= smax or cand_sid[t, pos] < 0:
+                    continue
+                sid = int(cand_sid[t, pos])
+                lps = list(self.sessions[sid].hbm_slots)[:k]
+                for lp in lps:
+                    self._release_slot(sid, lp)
+
+    # ---- repartitioning (shared; sizing dispatch differs) ----------------
+    def _tenant_subtraces(self):
+        """Per-tenant (sid, write) sub-traces of the controller window —
+        from the ``[T, window]`` rings (batched) or by masking the global
+        ring (sequential); identical by construction."""
+        if self.batched:
+            return self._trings.window_rows(
+                max(self._ring.n - self._ring.window, 0))
+        addr, tenant, wr = self._window()
+        return ([addr[tenant == t] for t in range(self.num_tenants)],
+                [wr[tenant == t] for t in range(self.num_tenants)])
+
+    def _repartition(self):
+        """POD(RO) per tenant over the activation window -> PPC split of
+        the HBM pool (paper §4.3 applied to pages). Batched: all tenants'
+        POD decompositions in ONE vmapped dispatch."""
+        sids, writes = self._tenant_subtraces()
+        if sum(int(s.size) for s in sids) == 0:
+            return
+        grid = size_grid(self.cfg.hbm_pages, 16)
+        demands = np.zeros(self.num_tenants, np.int64)
+        curves = np.zeros((self.num_tenants, grid.size))
+        if self.batched:
+            rs = core_reuse.pod_distances_batch(sids, writes, Policy.RO)
+        else:
+            rs = [core_reuse.pod_distances(s, w, Policy.RO)
+                  if s.size else None for s, w in zip(sids, writes)]
+        for t, r in enumerate(rs):
+            if r is None:
+                continue
             # demand in sessions -> pages (mean pages per session of tenant)
             sess_pages = [len(s.pages) or 1 for s in self.sessions.values()
                           if s.tenant == t] or [1]
@@ -281,7 +551,6 @@ class TwoTierKVManager:
                              self.cfg.hbm_pages)
             hits = core_reuse.hit_counts_at_sizes(
                 r.dist, r.served, np.maximum(grid // per, 1))
-            curves[t] = np.asarray(hits, np.float64) / max(mask.sum(), 1)
+            curves[t] = np.asarray(hits, np.float64) / max(sids[t].size, 1)
         res = _partition(demands, curves, grid, self.cfg.hbm_pages)
-        alloc = np.maximum(res.alloc, 1)
-        self.tenant_quota = alloc
+        self.tenant_quota = quota_with_floor(res.alloc, self.cfg.hbm_pages)

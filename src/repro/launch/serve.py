@@ -1,14 +1,22 @@
-"""Batched serving driver with the ETICA two-tier KV manager.
+"""Churn-driven serving with the ETICA two-tier KV manager.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
-        --sessions 24 --tenants 2 --rounds 200 [--manager lru]
+        --events 2000 --tenants 4 --live 256 [--manager lru]
 
-Sessions arrive per a zipf popularity; each round the scheduler activates
-a batch of sessions (tier-1 residency via the POD/popularity controller),
-runs real decode steps of a reduced model through the paged-attention
-path, and appends the generated KV pages through the WBWO commit path.
-Prints hit ratio / DMA traffic / latency — the serving analogs of the
-paper's hit-ratio / SSD-write / latency metrics.
+A session arrival/churn stream (`repro.traces.generate_sessions`: zipf
+popularity, bursty batch residency, bounded lifetimes) drives the
+manager's full lifecycle — arrivals, activations (tier-1 residency via
+the POD/popularity controller), KV-page appends (WBWO commits), and
+retirements — at serving population sizes, not a fixed handful of
+sessions. KV pages are *real*: one prefill of the reduced model fills a
+bank of pages from its first attention layer's cache, and decode steps
+run real paged attention against the HBM pool. Prints hit ratio / DMA
+traffic / latency — the serving analogs of the paper's hit-ratio /
+SSD-write / latency metrics.
+
+Managers: ``etica`` (batched controller), ``etica-seq`` (the host-dict
+sequential oracle — same decisions, slower), ``lru`` (global LRU +
+write-back baseline).
 """
 from __future__ import annotations
 
@@ -23,17 +31,94 @@ from repro import configs
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kvcache import GlobalLRUManager, TwoTierConfig, TwoTierKVManager
 from repro.models import model as M
+from repro.traces import (SESSION_ACTIVATE, SESSION_APPEND, SESSION_END,
+                          SESSION_NEW, SessionSpec, generate_sessions)
+
+
+def kv_page_bank(cfg, kv_cfg: TwoTierConfig, bank: int, seed: int):
+    """A bank of real KV pages: prefill the reduced model once over
+    ``bank`` pages' worth of random tokens and slice its first attention
+    layer's cache into ``[1, page_size, heads, dim]`` pages. Falls back
+    to gaussian pages for frontends whose prefill needs extra modalities
+    (encdec/vision) — the manager only moves bytes either way."""
+    ps = kv_cfg.page_size
+    rng = np.random.default_rng(seed)
+    if cfg.is_encdec or getattr(cfg, "frontend", None) == "vision":
+        pages = rng.normal(size=(bank, 1, ps, kv_cfg.num_kv_heads,
+                                 kv_cfg.head_dim)).astype(np.float32)
+        return pages, pages
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                              (1, bank * ps), 0, cfg.vocab_size)
+    _, cache = M.prefill(params, cfg, {"tokens": toks}, cache_len=bank * ps)
+    k_leaf = v_leaf = None
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            cache["layers"])[0]:
+        name = getattr(path[-1], "key", getattr(path[-1], "name", ""))
+        if np.ndim(leaf) == 5 and np.shape(leaf)[2] == bank * ps:
+            if name == "k" and k_leaf is None:
+                k_leaf = np.asarray(leaf[0], np.float32)   # [1, S, Hkv, D]
+            elif name == "v" and v_leaf is None:
+                v_leaf = np.asarray(leaf[0], np.float32)
+    assert k_leaf is not None and v_leaf is not None, "no attention cache"
+    if (k_leaf.shape[2], k_leaf.shape[3]) != (kv_cfg.num_kv_heads,
+                                              kv_cfg.head_dim):
+        raise ValueError("kv geometry mismatch between model and pool")
+    split = lambda a: np.stack([a[:, i * ps:(i + 1) * ps]
+                                for i in range(bank)])
+    return split(k_leaf), split(v_leaf)
+
+
+def run_events(mgr, trace, k_bank, v_bank, *, decode_every: int = 0,
+               seed: int = 0):
+    """Replay a SessionTrace through a manager; optionally run a real
+    paged-attention decode step every ``decode_every``-th activation."""
+    rng = np.random.default_rng(seed)
+    bank = k_bank.shape[0]
+    n_act = 0
+    for i in range(len(trace)):
+        kind, sid = int(trace.kind[i]), int(trace.sid[i])
+        if kind == SESSION_NEW:
+            mgr.new_session(sid, int(trace.tenant[i]))
+        elif kind == SESSION_APPEND:
+            j = sid % bank
+            mgr.append_page(sid, k_bank[j], v_bank[j])
+        elif kind == SESSION_ACTIVATE:
+            pt = mgr.activate(sid)
+            n_act += 1
+            if decode_every and n_act % decode_every == 0:
+                h, d = mgr.cfg.num_kv_heads, mgr.cfg.head_dim
+                q = jnp.asarray(rng.normal(size=(1, h, d)), jnp.float32)
+                lengths = jnp.asarray([mgr.sessions[sid].length], jnp.int32)
+                out = decode_attention(
+                    q, (mgr.k_pool[0], mgr.v_pool[0]),
+                    jnp.asarray(pt[None, :]), lengths)
+                assert bool(jnp.all(jnp.isfinite(out)))
+            mgr.deactivate(sid)
+        elif kind == SESSION_END:
+            mgr.end_session(sid)
+    return mgr.stats
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--sessions", type=int, default=24)
-    ap.add_argument("--tenants", type=int, default=2)
-    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--events", type=int, default=2000)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--live", type=int, default=256,
+                    help="target concurrent sessions")
     ap.add_argument("--hbm-pages", type=int, default=64)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--manager", choices=["etica", "lru"], default="etica")
+    ap.add_argument("--max-pages", type=int, default=6,
+                    help="per-session KV budget (pages)")
+    ap.add_argument("--manager", choices=["etica", "etica-seq", "lru"],
+                    default="etica")
+    ap.add_argument("--decode-every", type=int, default=8,
+                    help="real paged-attention decode each Nth activation "
+                         "(0 = controller only)")
+    ap.add_argument("--no-materialize", action="store_true",
+                    help="skip device page pools (implies no decode) — "
+                         "controller-scale runs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -41,44 +126,28 @@ def main(argv=None):
     kv_cfg = TwoTierConfig(
         page_size=args.page_size, hbm_pages=args.hbm_pages,
         num_kv_heads=max(cfg.num_kv_heads, 1),
-        head_dim=max(cfg.head_dim, 8), num_layers=1, dtype="float32")
-    cls = TwoTierKVManager if args.manager == "etica" else GlobalLRUManager
-    mgr = cls(kv_cfg, args.tenants)
+        head_dim=max(cfg.head_dim, 8), num_layers=1, dtype="float32",
+        materialize=not args.no_materialize)
+    if args.manager == "lru":
+        mgr = GlobalLRUManager(kv_cfg, args.tenants)
+    else:
+        mgr = TwoTierKVManager(kv_cfg, args.tenants,
+                               batched=args.manager == "etica")
 
-    rng = np.random.default_rng(args.seed)
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    for sid in range(args.sessions):
-        mgr.new_session(sid, sid % args.tenants)
-
-    # zipf session popularity
-    p = np.arange(1, args.sessions + 1, dtype=np.float64) ** -1.2
-    p /= p.sum()
+    spec = SessionSpec(num_tenants=args.tenants, target_live=args.live,
+                       max_pages=args.max_pages)
+    trace = generate_sessions(spec, args.events, seed=args.seed)
+    k_bank, v_bank = kv_page_bank(cfg, kv_cfg, bank=8, seed=args.seed)
 
     t0 = time.time()
-    d = kv_cfg.head_dim
-    h = kv_cfg.num_kv_heads
-    for rnd in range(args.rounds):
-        sid = int(rng.choice(args.sessions, p=p))
-        sess = mgr.sessions[sid]
-        if not sess.pages or (rng.random() < 0.4 and len(sess.pages) < 8):
-            # generate: run a token through the reduced model's first
-            # attention projections to produce a real KV page, commit it
-            k_page = rng.normal(size=(1, kv_cfg.page_size, h, d)).astype(np.float32)
-            v_page = rng.normal(size=(1, kv_cfg.page_size, h, d)).astype(np.float32)
-            mgr.append_page(sid, k_page, v_page)
-        pt = mgr.activate(sid)
-        # one real paged-attention decode step against the HBM pool
-        q = jnp.asarray(rng.normal(size=(1, h, d)), jnp.float32)
-        lengths = jnp.asarray([sess.length], jnp.int32)
-        out = decode_attention(
-            q, (mgr.k_pool[0], mgr.v_pool[0]),
-            jnp.asarray(pt[None, :]), lengths)
-        assert bool(jnp.all(jnp.isfinite(out)))
-        mgr.deactivate(sid)
-
-    s = mgr.stats.as_dict()
+    decode_every = 0 if args.no_materialize else args.decode_every
+    stats = run_events(mgr, trace, k_bank, v_bank,
+                       decode_every=decode_every, seed=args.seed)
     wall = time.time() - t0
-    print(f"manager={args.manager} rounds={args.rounds} wall={wall:.1f}s")
+    s = stats.as_dict()
+    print(f"manager={args.manager} events={args.events} "
+          f"sessions={trace.num_sessions} max_live={trace.max_live} "
+          f"wall={wall:.1f}s")
     for k, v in s.items():
         print(f"  {k:18s} {v:,.3f}" if isinstance(v, float) else
               f"  {k:18s} {v:,}")

@@ -1,39 +1,56 @@
-"""Property-based invariants of the two-tier KV manager (hypothesis)."""
+"""Property-based invariants of the two-tier KV manager (hypothesis).
+
+Ops streams include churn (``end``) — a retired session is immediately
+replaced by a fresh arrival, so the population keeps turning over while
+the per-slot invariants must keep holding. The batched controller is
+additionally pinned to the sequential host-dict oracle bit for bit.
+"""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.kvcache import TwoTierConfig, TwoTierKVManager
+from repro.kvcache import TwoTierConfig, TwoTierKVManager, quota_with_floor
 
 CFG = TwoTierConfig(page_size=4, hbm_pages=16, num_kv_heads=1, head_dim=4,
                     num_layers=1, dtype="float32",
-                    maintenance_interval=8, resize_interval=32)
+                    maintenance_interval=8, resize_interval=32,
+                    pop_capacity=128)
 
 
 def _ops():
     return st.lists(
-        st.tuples(st.integers(0, 7),           # session id
-                  st.booleans()),              # append a page?
+        st.tuples(st.integers(0, 7),           # live-session index
+                  st.sampled_from(["activate", "append", "end"])),
         min_size=1, max_size=120)
 
 
-def _drive(ops):
-    mgr = TwoTierKVManager(CFG, num_tenants=2)
+def _drive(ops, batched=True, cfg=CFG):
+    mgr = TwoTierKVManager(cfg, num_tenants=2, batched=batched)
     rng = np.random.default_rng(0)
-    for sid in range(8):
+    live = list(range(8))
+    next_sid = 8
+    for sid in live:
         mgr.new_session(sid, sid % 2)
-    for sid, do_append in ops:
-        if do_append and len(mgr.sessions[sid].pages) < 4:
-            pg = rng.normal(size=(1, CFG.page_size, 1, 4)).astype(np.float32)
+    for idx, action in ops:
+        sid = live[idx]
+        if action == "end":
+            mgr.end_session(sid)
+            live[idx] = next_sid
+            mgr.new_session(next_sid, next_sid % 2)
+            next_sid += 1
+            continue
+        if action == "append" and len(mgr.sessions[sid].pages) < 4:
+            pg = rng.normal(size=(1, cfg.page_size, 1, 4)).astype(np.float32)
             mgr.append_page(sid, pg, pg)
         mgr.activate(sid)
-    return mgr
+    return mgr, live
 
 
 @given(_ops())
 @settings(max_examples=20, deadline=None)
 def test_slot_accounting_consistent(ops):
-    """free + owned slots == pool size; owners and sessions agree."""
-    mgr = _drive(ops)
+    """free + owned slots == pool size; owners and sessions agree (the
+    slot_owner <-> hbm_slots bijection)."""
+    mgr, _ = _drive(ops)
     assert len(mgr.free) + len(mgr.slot_owner) == CFG.hbm_pages
     for slot, (sid, lp) in mgr.slot_owner.items():
         assert mgr.sessions[sid].hbm_slots.get(lp) == slot
@@ -43,33 +60,52 @@ def test_slot_accounting_consistent(ops):
 
 @given(_ops())
 @settings(max_examples=20, deadline=None)
+def test_tenant_used_matches_recount(ops):
+    """The incremental per-tenant residency counters equal a from-scratch
+    recount over the page tables."""
+    mgr, _ = _drive(ops)
+    recount = np.zeros(mgr.num_tenants, np.int64)
+    for sess in mgr.sessions.values():
+        recount[sess.tenant] += len(sess.hbm_slots)
+    assert (mgr.tenant_used == recount).all()
+
+
+@given(_ops())
+@settings(max_examples=20, deadline=None)
 def test_tier2_is_authoritative(ops):
-    """Every logical page of every session has a host (tier-2) copy —
-    the RO-tier reliability invariant: HBM loss can never lose data."""
-    mgr = _drive(ops)
+    """Every logical page of every live session has a host (tier-2) copy
+    — the RO-tier reliability invariant: HBM loss can never lose data.
+    Ended sessions' pages are gone (no tier-2 leak)."""
+    mgr, _ = _drive(ops)
+    live_pages = set()
     for sid, sess in mgr.sessions.items():
         for lp in sess.pages:
             assert (sid, lp) in mgr.host
+            live_pages.add((sid, lp))
+    assert set(mgr.host) == live_pages
 
 
 @given(_ops())
 @settings(max_examples=20, deadline=None)
 def test_wbwo_write_bound(ops):
-    """Tier-2 DMA writes == pages generated exactly once (WBWO bound)."""
-    mgr = _drive(ops)
-    assert mgr.stats.dma_write_bytes == len(mgr.host) * CFG.page_bytes
+    """Tier-2 DMA writes == pages generated, each written exactly once
+    (WBWO bound) — churn frees host copies without extra DMA."""
+    mgr, _ = _drive(ops)
+    assert mgr.stats.dma_write_bytes == mgr.stats.appends * CFG.page_bytes
 
 
 @given(_ops())
 @settings(max_examples=20, deadline=None)
 def test_activation_makes_resident(ops):
     """After activate(sid), every page of sid is HBM-resident and its
-    page table points at slots owned by (sid, page)."""
-    mgr = _drive(ops)
-    for sid in range(8):
+    page table points at slots owned by (sid, page) — no -1 sentinel
+    survives an activation."""
+    mgr, live = _drive(ops)
+    for sid in live:
         if not mgr.sessions[sid].pages:
             continue
         pt = mgr.activate(sid)
+        assert (pt >= 0).all()
         for lp, slot in enumerate(pt):
             assert mgr.slot_owner[int(slot)] == (sid, lp)
 
@@ -77,6 +113,52 @@ def test_activation_makes_resident(ops):
 @given(_ops())
 @settings(max_examples=20, deadline=None)
 def test_quota_totals_bounded(ops):
-    mgr = _drive(ops)
-    assert mgr.tenant_quota.sum() <= CFG.hbm_pages + len(mgr.tenant_quota)
+    """Quotas never promise more than the physical pool (the old min-1
+    floor could), and every tenant keeps the floor page."""
+    mgr, _ = _drive(ops)
+    assert mgr.tenant_quota.sum() <= CFG.hbm_pages
+    assert (mgr.tenant_quota >= 1).all()
     assert (mgr.tenant_used >= 0).all()
+
+
+@given(_ops())
+@settings(max_examples=10, deadline=None)
+def test_batched_matches_sequential_oracle(ops):
+    """The batched controller (device popularity table + fused
+    maintenance) reproduces the host-dict oracle bit for bit: same
+    stats, same final placements, same free-list order, same quotas."""
+    cfg = TwoTierConfig(page_size=4, hbm_pages=16, num_kv_heads=1,
+                        head_dim=4, num_layers=1, dtype="float32",
+                        maintenance_interval=8, resize_interval=32,
+                        pop_capacity=128, materialize=False)
+    a, _ = _drive(ops, batched=True, cfg=cfg)
+    b, _ = _drive(ops, batched=False, cfg=cfg)
+    assert a.stats.as_dict() == b.stats.as_dict()
+    assert a.slot_owner == b.slot_owner
+    assert a.free == b.free
+    assert (a.tenant_quota == b.tenant_quota).all()
+    assert (a.tenant_used == b.tenant_used).all()
+
+
+@given(st.integers(1, 2048), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_size_grid_covers_endpoints(capacity, points):
+    """The candidate-size grid always includes 0 and the full capacity
+    (the old arange dropped the endpoint when capacity % step != 0)."""
+    from repro.core.partition import size_grid
+    grid = size_grid(capacity, points)
+    assert grid[0] == 0 and grid[-1] == capacity
+    assert (np.diff(grid) > 0).all()
+
+
+@given(st.lists(st.integers(0, 64), min_size=1, max_size=12),
+       st.integers(1, 128))
+@settings(max_examples=50, deadline=None)
+def test_quota_floor_never_exceeds_pool(alloc, capacity):
+    """quota_with_floor keeps sum(quota) <= capacity while giving every
+    tenant a page whenever the pool is big enough."""
+    q = quota_with_floor(np.asarray(alloc, np.int64), capacity)
+    assert q.sum() <= capacity
+    if capacity >= len(alloc):
+        assert (q >= 1).all()
+    assert (q >= 0).all()

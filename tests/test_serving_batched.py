@@ -1,0 +1,213 @@
+"""Batched serving controller vs the host-dict oracle, churn generator
+validity, bounded controller memory, and the repartition edge-case fixes.
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import size_grid
+from repro.kvcache import (GlobalLRUManager, TwoTierConfig, TwoTierKVManager,
+                           quota_with_floor)
+from repro.traces import (SESSION_ACTIVATE, SESSION_APPEND, SESSION_END,
+                          SESSION_NEW, SessionSpec, SessionTrace,
+                          generate_sessions)
+
+CFG = TwoTierConfig(page_size=8, hbm_pages=24, num_kv_heads=2, head_dim=4,
+                    num_layers=1, dtype="float32",
+                    maintenance_interval=16, resize_interval=64,
+                    pop_capacity=128, materialize=False)
+
+
+def _replay(mgr, trace, bank_seed=7):
+    rng = np.random.default_rng(bank_seed)
+    pg = rng.normal(size=(1, mgr.cfg.page_size, mgr.cfg.num_kv_heads,
+                          mgr.cfg.head_dim)).astype(np.float32)
+    for i in range(len(trace)):
+        kind, sid = int(trace.kind[i]), int(trace.sid[i])
+        if kind == SESSION_NEW:
+            mgr.new_session(sid, int(trace.tenant[i]))
+        elif kind == SESSION_APPEND:
+            mgr.append_page(sid, pg, pg)
+        elif kind == SESSION_ACTIVATE:
+            mgr.activate(sid)
+        elif kind == SESSION_END:
+            mgr.end_session(sid)
+    return mgr
+
+
+def _snapshot(mgr):
+    return (mgr.stats.as_dict(), dict(mgr.slot_owner), tuple(mgr.free),
+            tuple(int(q) for q in mgr.tenant_quota),
+            tuple(int(u) for u in mgr.tenant_used),
+            sorted(mgr.host))
+
+
+class TestChurnGenerator:
+    def test_stream_is_well_formed(self):
+        spec = SessionSpec(num_tenants=3, target_live=64, max_pages=5,
+                           lifetime=25)
+        tr = generate_sessions(spec, 4000, seed=3)
+        born, dead = set(), set()
+        pages = {}
+        for k, s in zip(tr.kind, tr.sid):
+            s = int(s)
+            if k == SESSION_NEW:
+                assert s not in born
+                born.add(s)
+                pages[s] = 0
+            else:
+                assert s in born and s not in dead
+                if k == SESSION_APPEND:
+                    pages[s] += 1
+                    assert pages[s] <= spec.max_pages
+                elif k == SESSION_END:
+                    dead.add(s)
+        assert (tr.tenant[tr.kind == SESSION_NEW] >= 0).all()
+        assert (tr.tenant[tr.kind == SESSION_NEW] < 3).all()
+        assert tr.max_live <= spec.target_live
+        assert len(dead) > 0, "no churn generated"
+
+    def test_deterministic_and_scales_to_thousands(self):
+        spec = SessionSpec(num_tenants=4, target_live=512, lifetime=15,
+                           p_end=0.05)
+        a = generate_sessions(spec, 25000, seed=1)
+        b = generate_sessions(spec, 25000, seed=1)
+        assert (a.kind == b.kind).all() and (a.sid == b.sid).all()
+        assert a.num_sessions >= 1000
+
+
+class TestBatchedOracleEquality:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_bit_identical_on_churn_traces(self, seed):
+        """The tentpole gate: batched controller == sequential oracle on
+        randomized arrival/churn streams — stats, placements, free-list
+        order, quotas, and tier-2 contents all equal."""
+        spec = SessionSpec(num_tenants=3, target_live=48, max_pages=4,
+                           lifetime=20)
+        tr = generate_sessions(spec, 1500, seed=seed)
+        a = _replay(TwoTierKVManager(CFG, 3, batched=True), tr)
+        b = _replay(TwoTierKVManager(CFG, 3, batched=False), tr)
+        assert _snapshot(a) == _snapshot(b)
+        assert a.stats.pop_drops == 0
+
+    def test_popularity_mirror_matches_tracker(self):
+        """After the same stream, the batched device table's host mirror
+        scores every live session exactly like the oracle's trackers."""
+        spec = SessionSpec(num_tenants=2, target_live=24, max_pages=4)
+        tr = generate_sessions(spec, 800, seed=5)
+        a = _replay(TwoTierKVManager(CFG, 2, batched=True), tr)
+        b = _replay(TwoTierKVManager(CFG, 2, batched=False), tr)
+        sids = np.array(sorted(a.sessions), np.int64)
+        tens = np.array([a.sessions[int(s)].tenant for s in sids])
+        assert (a._scores(tens, sids) == b._scores(tens, sids)).all()
+
+
+class TestBoundedControllerMemory:
+    def test_trace_state_is_bounded(self):
+        """Satellite 1: controller trace memory stays O(window), not
+        O(activations) — ten windows of traffic leave the rings at their
+        fixed capacity and no unbounded trace lists exist."""
+        mgr = TwoTierKVManager(CFG, 2, batched=True)
+        rng = np.random.default_rng(0)
+        pg = rng.normal(size=(1, CFG.page_size, 2, 4)).astype(np.float32)
+        for sid in range(6):
+            mgr.new_session(sid, sid % 2)
+            mgr.append_page(sid, pg, pg)
+        n_events = CFG.resize_interval * 10
+        for i in range(n_events):
+            mgr.activate(i % 6)
+        assert not hasattr(mgr, "trace_addr")
+        assert mgr._ring.sid.size == CFG.resize_interval
+        assert mgr._ring.n >= n_events
+        assert mgr._trings.sid.shape == (2, CFG.resize_interval)
+
+    def test_host_pool_shrinks_with_churn(self):
+        """Tier-2 host memory tracks the live population, not the total
+        session count."""
+        spec = SessionSpec(num_tenants=2, target_live=16, max_pages=3,
+                           lifetime=10, p_end=0.2)
+        tr = generate_sessions(spec, 3000, seed=9)
+        mgr = _replay(TwoTierKVManager(CFG, 2, batched=True), tr)
+        assert mgr.stats.sessions_ended > 50
+        live_pages = sum(len(s.pages) for s in mgr.sessions.values())
+        assert len(mgr.host) == live_pages
+
+
+class TestPageTableSentinel:
+    def test_non_resident_pages_are_minus_one(self):
+        """Satellite 2: a page evicted from HBM shows as -1 in the page
+        table (the old code aliased slot 0, silently reading another
+        session's KV)."""
+        cfg = TwoTierConfig(page_size=4, hbm_pages=4, num_kv_heads=1,
+                            head_dim=4, num_layers=1, dtype="float32",
+                            maintenance_interval=1000,
+                            resize_interval=1000, materialize=False)
+        mgr = TwoTierKVManager(cfg, 1, batched=True)
+        pg = np.zeros((1, 4, 1, 4), np.float32)
+        mgr.new_session(0, 0)
+        mgr.new_session(1, 0)
+        for _ in range(3):
+            mgr.append_page(0, pg, pg)
+        for _ in range(3):                 # pool is 4: evicts sid 0 pages
+            mgr.append_page(1, pg, pg)
+        pt0 = mgr.page_table(0)
+        assert (pt0 == -1).any()
+        assert 0 not in pt0[pt0 == -1]
+        # re-activation restores residency and the table is clean again
+        pt0 = mgr.activate(0)
+        assert (pt0 >= 0).all()
+
+
+class TestRepartitionEdgeCases:
+    def test_size_grid_includes_capacity_endpoint(self):
+        """Satellite 3a: capacity not divisible by the step used to drop
+        the top grid point, capping any tenant below the full pool."""
+        grid = size_grid(50, 16)           # step = 3; old arange topped at 48
+        assert grid[-1] == 50
+        grid = size_grid(7, 16)            # step = 1
+        assert grid[-1] == 7 and grid[0] == 0
+        grid = size_grid(1024, 16)
+        assert grid[-1] == 1024 and grid[0] == 0
+
+    def test_quota_floor_conserves_pool(self):
+        """Satellite 3b: the min-1 floor is paid for by shaving the
+        largest allocations instead of minting pages (old behavior let
+        sum(quota) exceed the pool)."""
+        q = quota_with_floor(np.array([0, 0, 0, 16]), 16)
+        assert q.sum() <= 16 and (q >= 1).all()
+        q = quota_with_floor(np.array([8, 8]), 16)
+        assert list(q) == [8, 8]
+        # pool smaller than tenant count: best effort, never over
+        q = quota_with_floor(np.array([5, 5, 5]), 2)
+        assert q.sum() <= 2
+
+    def test_repartition_can_grant_whole_pool_minus_floors(self):
+        """With one hot tenant and an indivisible pool size, the hot
+        tenant can now reach the grid's top sizes."""
+        cfg = TwoTierConfig(page_size=4, hbm_pages=50, num_kv_heads=1,
+                            head_dim=4, num_layers=1, dtype="float32",
+                            maintenance_interval=10, resize_interval=40,
+                            materialize=False)
+        mgr = TwoTierKVManager(cfg, 2, batched=True)
+        pg = np.zeros((1, 4, 1, 4), np.float32)
+        for sid in range(8):
+            mgr.new_session(sid, 0 if sid < 7 else 1)
+            mgr.append_page(sid, pg, pg)
+        for i in range(cfg.resize_interval * 3):
+            mgr.activate(i % 7)            # tenant 0 does all the work
+        assert mgr.tenant_quota.sum() <= cfg.hbm_pages
+        assert mgr.tenant_quota[0] > mgr.tenant_quota[1]
+        assert (mgr.tenant_quota >= 1).all()
+
+
+class TestLRUBaselineOnChurn:
+    def test_lru_pays_writeback_dma(self):
+        """The push-mode baseline writes back on eviction, so its DMA
+        writes strictly exceed the WBWO bound on an over-committed pool."""
+        spec = SessionSpec(num_tenants=2, target_live=32, max_pages=4)
+        tr = generate_sessions(spec, 1200, seed=11)
+        lru = _replay(GlobalLRUManager(CFG, 2), tr)
+        etica = _replay(TwoTierKVManager(CFG, 2, batched=True), tr)
+        assert etica.stats.appends == lru.stats.appends
+        assert (etica.stats.dma_write_bytes
+                == etica.stats.appends * CFG.page_bytes)
+        assert lru.stats.dma_write_bytes > etica.stats.dma_write_bytes

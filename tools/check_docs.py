@@ -21,7 +21,11 @@ Checks, over README.md and docs/*.md:
   5. the IO-classification docs stay wired up: docs/architecture.md
      links both classify modules (``classify/rules.py`` and
      ``classify/classifier.py``) and the README module map names
-     ``classify/``, for a package that actually exists on disk.
+     ``classify/``, for a package that actually exists on disk;
+  6. the serving-workload docs stay wired up: docs/architecture.md
+     links the serving modules (``kvcache/manager.py``,
+     ``launch/serve.py``, ``traces/generators.py``) and the README
+     module map names ``kvcache/``, for modules that actually exist.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -140,6 +144,27 @@ def check_classification_docs() -> list[str]:
     return problems
 
 
+def check_serving_docs() -> list[str]:
+    problems = []
+    for mod in ("kvcache/manager.py", "kvcache/baseline.py",
+                "launch/serve.py", "traces/generators.py"):
+        if not (ROOT / "src/repro" / mod).exists():
+            problems.append(f"src/repro/{mod} missing "
+                            "(docs describe the serving workload)")
+    readme = (ROOT / "README.md").read_text()
+    if "`kvcache/`" not in readme:
+        problems.append("README.md: module map does not name kvcache/")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        targets = set(LINK_RE.findall(arch.read_text()))
+        for mod in ("kvcache/manager.py", "launch/serve.py",
+                    "traces/generators.py"):
+            if not any(t.endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: serving module "
+                                f"{mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -152,6 +177,7 @@ def main() -> int:
     problems.extend(check_streaming_docs())
     problems.extend(check_maintenance_docs())
     problems.extend(check_classification_docs())
+    problems.extend(check_serving_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
