@@ -218,6 +218,9 @@ class EticaConfig:
     fused_maintenance: bool = True   # one fused jitted maintenance dispatch
     pop_capacity: int = 8192         # per-VM device popularity-table slots
     classifier: object | None = None  # repro.classify.Classifier | None
+    clean_quota: int = 0             # background cleaner: max dirty-block
+    #                                  flushes per VM per maintenance
+    #                                  interval (0 disables the stage)
 
 
 class EticaCache:
@@ -255,6 +258,11 @@ class EticaCache:
         self.stats = [dict() for _ in range(num_vms)]
         self.logs_dram: list[IntervalLog] = []
         self.logs_ssd: list[IntervalLog] = []
+        # background-cleaner telemetry: one [V] vector per maintenance
+        # interval (batched paths) — flush counts and dirty occupancy
+        # after cleaning, for the endurance trajectory plots
+        self.clean_log: list[np.ndarray] = []
+        self.dirty_log: list[np.ndarray] = []
         # IO classification (repro.classify): per-VM sequential-run carry
         # plus the per-class tables the classified simulators consume
         self.classifier = cfg.classifier
@@ -264,6 +272,9 @@ class EticaCache:
             c = self.classifier.num_classes
             self._lo_d = self._hi_d = np.zeros((num_vms, c), np.int32)
             self._lo_s = self._hi_s = np.zeros((num_vms, c), np.int32)
+            # per-(VM, class) served hit/miss counters (telemetry export)
+            self.cls_hits = np.zeros((num_vms, c), np.int64)
+            self.cls_miss = np.zeros((num_vms, c), np.int64)
 
     def vm_dram(self, v: int) -> CacheState:
         return _vm_slice(self.dram, v) if self.cfg.batched else self.dram[v]
@@ -355,6 +366,8 @@ class EticaCache:
                     self.ssd[v], evict)
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + flushed)
+                self.stats[v]["evict_flushes"] = (
+                    self.stats[v].get("evict_flushes", 0.0) + flushed)
         # promotion queue: the most popular blocks known to the tracker
         # that lack an SSD copy (paper: "the most popular 5% of the data
         # blocks in disk subsystem"), drained up to the free space
@@ -372,6 +385,16 @@ class EticaCache:
                     self.stats[v].get("cache_writes_l2", 0.0) + n)
                 self.stats[v]["disk_reads"] = (
                     self.stats[v].get("disk_reads", 0.0) + n)
+        # background cleaner (third stage): flush the quota oldest dirty
+        # blocks so evictions later in the run hit clean blocks
+        if cfg.clean_quota > 0:
+            self.ssd[v], n_fl, left = simulator.clean_blocks_ref(
+                self.ssd[v], int(self.ways_ssd[v]), cfg.clean_quota)
+            self.stats[v]["flushes"] = (
+                self.stats[v].get("flushes", 0.0) + n_fl)
+            self.stats[v]["disk_writes"] = (
+                self.stats[v].get("disk_writes", 0.0) + n_fl)
+            self.stats[v]["dirty_resident"] = float(left)
 
     def _residents(self, tags_np: np.ndarray, v: int) -> np.ndarray:
         t = tags_np[v, :, : max(int(self.ways_ssd[v]), 0)]
@@ -417,14 +440,17 @@ class EticaCache:
                                      lens)
         r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                      sizing_reads_only=False, chunk=256)
-        self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen, pdrops = \
-            maint_ops.maintenance_interval(
+        (self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen, pdrops,
+         cleaned, dirty_left) = maint_ops.maintenance_interval(
                 self.ssd, self.pop_table, r.dist, r.served, amat,
                 np.asarray(lens, np.int32), self.ways_ssd, self.t,
-                evict_frac=cfg.evict_frac, decay=cfg.popularity_decay)
-        flushed, promoted, eqlen, pqlen, pdrops = (
-            np.asarray(flushed), np.asarray(promoted),
-            np.asarray(eqlen), np.asarray(pqlen), np.asarray(pdrops))
+                evict_frac=cfg.evict_frac, decay=cfg.popularity_decay,
+                clean_quota=cfg.clean_quota)
+        # ONE host transfer for all per-VM counters — the cleaner's two
+        # vectors ride the sync the interval already paid for
+        flushed, promoted, eqlen, pqlen, pdrops, cleaned, dirty_left = \
+            jax.device_get((flushed, promoted, eqlen, pqlen, pdrops,
+                            cleaned, dirty_left))
         for v in live:
             if pdrops[v]:
                 # merge-overflow: popularity entries pushed past the [V, K]
@@ -435,6 +461,9 @@ class EticaCache:
             if eqlen[v]:
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + int(flushed[v]))
+                self.stats[v]["evict_flushes"] = (
+                    self.stats[v].get("evict_flushes", 0.0)
+                    + int(flushed[v]))
             if pqlen[v]:
                 # each promotion = 1 disk read + 1 SSD write (endurance)
                 self.stats[v]["cache_writes_l2"] = (
@@ -442,6 +471,15 @@ class EticaCache:
                     + int(promoted[v]))
                 self.stats[v]["disk_reads"] = (
                     self.stats[v].get("disk_reads", 0.0) + int(promoted[v]))
+            if cfg.clean_quota > 0:
+                self.stats[v]["flushes"] = (
+                    self.stats[v].get("flushes", 0.0) + int(cleaned[v]))
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + int(cleaned[v]))
+                self.stats[v]["dirty_resident"] = float(dirty_left[v])
+        if cfg.clean_quota > 0:
+            self.clean_log.append(cleaned.copy())
+            self.dirty_log.append(dirty_left.copy())
 
     def _maintain_staged(self, chunks: list[Trace | None]) -> None:
         """Staged batched maintenance (host trackers + separate vmapped
@@ -489,6 +527,9 @@ class EticaCache:
                     self.stats[v]["disk_writes"] = (
                         self.stats[v].get("disk_writes", 0.0)
                         + int(flushed[v]))
+                    self.stats[v]["evict_flushes"] = (
+                        self.stats[v].get("evict_flushes", 0.0)
+                        + int(flushed[v]))
             tags_np = np.asarray(self.ssd.tags)
 
         promo_qs = [nothing] * self.num_vms
@@ -509,6 +550,23 @@ class EticaCache:
                     self.stats[v]["disk_reads"] = (
                         self.stats[v].get("disk_reads", 0.0) + int(n[v]))
 
+        # background cleaner (third stage): one vmapped dispatch flushes
+        # the quota oldest dirty blocks per live VM
+        if cfg.clean_quota > 0:
+            quota = np.zeros(self.num_vms, np.int32)
+            quota[live] = cfg.clean_quota
+            self.ssd, cleaned, dirty_left = simulator.clean_batch(
+                self.ssd, self.ways_ssd, quota)
+            cleaned, dirty_left = jax.device_get((cleaned, dirty_left))
+            for v in live:
+                self.stats[v]["flushes"] = (
+                    self.stats[v].get("flushes", 0.0) + int(cleaned[v]))
+                self.stats[v]["disk_writes"] = (
+                    self.stats[v].get("disk_writes", 0.0) + int(cleaned[v]))
+                self.stats[v]["dirty_resident"] = float(dirty_left[v])
+            self.clean_log.append(np.asarray(cleaned).copy())
+            self.dirty_log.append(np.asarray(dirty_left).copy())
+
     # -- datapath ----------------------------------------------------------
     def _run_chunk_batched(self, a, w, chunks: list[Trace | None],
                            cmat: np.ndarray | None = None) -> None:
@@ -526,11 +584,14 @@ class EticaCache:
                     a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
                     mode=cfg.mode, t0=self.t)
         else:
-            self.dram, self.ssd, st, t_end = \
+            self.dram, self.ssd, st, t_end, ch, cm = \
                 simulator.simulate_two_level_classified_batch(
                     a, w, cmat, self.dram, self.ssd, self.ways_dram,
                     self.ways_ssd, self._byp, self._lo_d, self._hi_d,
                     self._lo_s, self._hi_s, mode=cfg.mode, t0=self.t)
+            ch, cm = jax.device_get((ch, cm))
+            self.cls_hits += np.asarray(ch, np.int64)
+            self.cls_miss += np.asarray(cm, np.int64)
         self.t = np.asarray(t_end)
         st = jax.device_get(st)
         for v, chunk in enumerate(chunks):
@@ -558,13 +619,15 @@ class EticaCache:
                                   (k + 1) * cfg.promo_interval]
                 cpad = np.zeros(cfg.promo_interval, np.int32)
                 cpad[:len(seg)] = seg
-                self.dram[v], self.ssd[v], st, t_end = \
+                self.dram[v], self.ssd[v], st, t_end, ch, cm = \
                     simulator.simulate_two_level_classified(
                         a, w, cpad, self.dram[v], self.ssd[v],
                         int(self.ways_dram[v]), int(self.ways_ssd[v]),
                         self._byp, self._lo_d[v], self._hi_d[v],
                         self._lo_s[v], self._hi_s[v],
                         mode=cfg.mode, t0=int(self.t[v]))
+                self.cls_hits[v] += np.asarray(ch, np.int64)
+                self.cls_miss[v] += np.asarray(cm, np.int64)
             self.t[v] = int(t_end)
             _acc(self.stats[v], st)
 
@@ -616,6 +679,9 @@ class EticaCache:
                     self.stats[v]["disk_writes"] = (
                         self.stats[v].get("disk_writes", 0.0)
                         + int(flushed[v]))
+                    self.stats[v]["evict_flushes"] = (
+                        self.stats[v].get("evict_flushes", 0.0)
+                        + int(flushed[v]))
             else:
                 for v in range(self.num_vms):
                     self.dram[v], _ = simulator.resize_ref(
@@ -624,6 +690,8 @@ class EticaCache:
                         self.ssd[v], int(self.ways_ssd[v]), int(ws[v]))
                     self.stats[v]["disk_writes"] = (
                         self.stats[v].get("disk_writes", 0.0) + fl)
+                    self.stats[v]["evict_flushes"] = (
+                        self.stats[v].get("evict_flushes", 0.0) + fl)
             for v in range(self.num_vms):
                 alloc_hist[v].append(int(alloc_d[v] + alloc_s[v]))
             self.ways_dram, self.ways_ssd = wd, ws
@@ -751,6 +819,9 @@ class PartitionedSingleLevelCache:
         if self.classifier is not None:
             self._cls_end, self._cls_len = self.classifier.init_carry(num_vms)
             self._byp = np.asarray(self.classifier.bypass, bool)
+            c = self.classifier.num_classes
+            self.cls_hits = np.zeros((num_vms, c), np.int64)
+            self.cls_miss = np.zeros((num_vms, c), np.int64)
 
     def vm_cache(self, v: int) -> CacheState:
         return _vm_slice(self.caches, v) if self.cfg.batched else self.caches[v]
@@ -833,12 +904,17 @@ class PartitionedSingleLevelCache:
                     self.stats[v]["disk_writes"] = (
                         self.stats[v].get("disk_writes", 0.0)
                         + int(flushed[v]))
+                    self.stats[v]["evict_flushes"] = (
+                        self.stats[v].get("evict_flushes", 0.0)
+                        + int(flushed[v]))
             else:
                 for v in range(self.num_vms):
                     self.caches[v], fl = simulator.resize_ref(
                         self.caches[v], int(self.ways[v]), int(w_new[v]))
                     self.stats[v]["disk_writes"] = (
                         self.stats[v].get("disk_writes", 0.0) + fl)
+                    self.stats[v]["evict_flushes"] = (
+                        self.stats[v].get("evict_flushes", 0.0) + fl)
             for v in range(self.num_vms):
                 alloc_hist[v].append(int(alloc[v]))
             self.ways = w_new
@@ -859,10 +935,13 @@ class PartitionedSingleLevelCache:
                                 t0=self.t)
                     else:
                         cmat = _cls_chunk(cls_subs, k, cfg.sim_chunk)
-                        self.caches, st, t_end = \
+                        self.caches, st, t_end, ch, cm = \
                             simulator.simulate_single_level_classified_batch(
                                 a, wr, cmat, self.caches, self.ways,
                                 flags_vc, lo, hi, self._byp, t0=self.t)
+                        ch, cm = jax.device_get((ch, cm))
+                        self.cls_hits += np.asarray(ch, np.int64)
+                        self.cls_miss += np.asarray(cm, np.int64)
                     self.t = np.asarray(t_end)
                     st = jax.device_get(st)
                     for v, chunk in enumerate(kth):
@@ -890,11 +969,13 @@ class PartitionedSingleLevelCache:
                             cpad[:len(seg)] = seg
                             fv = simulator.PolicyFlags(
                                 *[np.asarray(f[v]) for f in flags_vc])
-                            self.caches[v], st, t_end = \
+                            self.caches[v], st, t_end, ch, cm = \
                                 simulator.simulate_single_level_classified(
                                     a, wr, cpad, self.caches[v],
                                     int(self.ways[v]), fv, lo[v], hi[v],
                                     self._byp, t0=int(self.t[v]))
+                            self.cls_hits[v] += np.asarray(ch, np.int64)
+                            self.cls_miss[v] += np.asarray(cm, np.int64)
                         self.t[v] = int(t_end)
                         _acc(self.stats[v], st)
         return [VMResult(dict(self.stats[v]),

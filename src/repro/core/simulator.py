@@ -83,11 +83,14 @@ class Stats(NamedTuple):
     # multiply without forcing JAX backend init at import time
     bypassed: jax.Array = np.int32(0)    # classifier bypass channel
     pop_drops: jax.Array = np.int32(0)   # popularity-table merge overflow
+    flushes: jax.Array = np.int32(0)     # background-cleaner dirty flushes
+    dirty_resident: jax.Array = np.int32(0)  # gauge: dirty blocks resident
+                                             # after the last maintenance
 
     @staticmethod
     def zero() -> "Stats":
         z = jnp.int32(0)
-        return Stats(z, z, z, z, z, z, z, z, jnp.float32(0.0), z, z)
+        return Stats(z, z, z, z, z, z, z, z, jnp.float32(0.0), z, z, z, z)
 
     def merge(self, o: "Stats") -> "Stats":
         return Stats(*[a + b for a, b in zip(self, o)])
@@ -571,13 +574,21 @@ def _simulate_single_level_classified(addr, is_write, cls, state: CacheState,
         st = jax.tree_util.tree_map(
             lambda new, old: jnp.where(valid, new, old), st, st0)
         ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
-        return (st, stats.merge(ds), t + valid.astype(jnp.int32)), None
+        serve_hit = jnp.where(byp, False,
+                              jnp.where(w & fc.write_invalidates, False, hit))
+        elig = valid & ~byp
+        return ((st, stats.merge(ds), t + valid.astype(jnp.int32)),
+                (serve_hit, elig, c))
 
-    (state, stats, t_end), _ = jax.lax.scan(
+    (state, stats, t_end), (sh, el, cs) = jax.lax.scan(
         step, (state, Stats.zero(), jnp.asarray(t0, jnp.int32)),
         (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
          jnp.asarray(cls, jnp.int32)))
-    return state, stats, t_end
+    cls_hits = jnp.zeros(nc, jnp.int32).at[cs].add(
+        (el & sh).astype(jnp.int32))
+    cls_miss = jnp.zeros(nc, jnp.int32).at[cs].add(
+        (el & ~sh).astype(jnp.int32))
+    return state, stats, t_end, cls_hits, cls_miss
 
 
 @jax.jit
@@ -587,7 +598,11 @@ def simulate_single_level_classified(addr, is_write, cls, state: CacheState,
                                      t_cache=T_SSD, t0=0):
     """Classified :func:`simulate_single_level`: ``cls`` is a per-request
     ``[N]`` class id, ``flags`` fields / ``way_lo`` / ``way_hi`` /
-    ``bypass`` are ``[C]`` per-class tables."""
+    ``bypass`` are ``[C]`` per-class tables. Returns ``(state, stats,
+    t_end, cls_hits, cls_miss)`` — the last two are per-class ``[C]``
+    served hit/miss counts over non-bypassed valid requests
+    (``cls_hits + cls_miss`` sums to ``stats.reads + stats.writes -
+    stats.bypassed`` and ``cls_hits`` sums to the served hits)."""
     return _simulate_single_level_classified(
         addr, is_write, cls, state, ways_active, flags,
         jnp.asarray(way_lo, jnp.int32), jnp.asarray(way_hi, jnp.int32),
@@ -602,7 +617,8 @@ def simulate_single_level_classified_batch(addr, is_write, cls,
                                            t_cache=T_SSD, t0=0):
     """Batched classified single level: ``addr``/``is_write``/``cls`` are
     ``[V, N]``, ``flags`` fields and way bounds are ``[V, C]``, ``bypass``
-    is a shared ``[C]`` mask."""
+    is a shared ``[C]`` mask. Per-class hit/miss counts come back as
+    ``[V, C]``."""
     v = jnp.shape(addr)[0]
     t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
     return jax.vmap(
@@ -707,13 +723,21 @@ def _simulate_two_level_classified(addr, is_write, cls, dram: CacheState,
         ss = jax.tree_util.tree_map(
             lambda new, old: jnp.where(valid, new, old), ss, ss0)
         ds = Stats(*[d * valid.astype(d.dtype) for d in ds])
-        return (dr, ss, stats.merge(ds), t + valid.astype(jnp.int32)), None
+        serve_hit = jnp.where(byp, False,
+                              jnp.where(w, s_hit, d_hit | s_hit))
+        elig = valid & ~byp
+        return ((dr, ss, stats.merge(ds), t + valid.astype(jnp.int32)),
+                (serve_hit, elig, c))
 
-    (dram, ssd, stats, t_end), _ = jax.lax.scan(
+    (dram, ssd, stats, t_end), (sh, el, cs) = jax.lax.scan(
         step, (dram, ssd, Stats.zero(), jnp.asarray(t0, jnp.int32)),
         (jnp.asarray(addr, jnp.int32), jnp.asarray(is_write),
          jnp.asarray(cls, jnp.int32)))
-    return dram, ssd, stats, t_end
+    cls_hits = jnp.zeros(nc, jnp.int32).at[cs].add(
+        (el & sh).astype(jnp.int32))
+    cls_miss = jnp.zeros(nc, jnp.int32).at[cs].add(
+        (el & ~sh).astype(jnp.int32))
+    return dram, ssd, stats, t_end, cls_hits, cls_miss
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
@@ -722,7 +746,10 @@ def simulate_two_level_classified(addr, is_write, cls, dram: CacheState,
                                   bypass, lo_d, hi_d, lo_s, hi_s,
                                   mode: str = "full", t0=0):
     """Classified :func:`simulate_two_level`: per-request ``[N]`` class
-    ids, per-class ``[C]`` way bounds per level, ``[C]`` bypass mask."""
+    ids, per-class ``[C]`` way bounds per level, ``[C]`` bypass mask.
+    Returns ``(dram, ssd, stats, t_end, cls_hits, cls_miss)`` with
+    per-class ``[C]`` served hit/miss counts (any-level hit on reads,
+    SSD hit on writes; bypassed requests excluded)."""
     return _simulate_two_level_classified(
         addr, is_write, cls, dram, ssd, ways_dram, ways_ssd,
         jnp.asarray(bypass, bool),
@@ -737,7 +764,8 @@ def simulate_two_level_classified_batch(addr, is_write, cls,
                                         lo_d, hi_d, lo_s, hi_s,
                                         mode: str = "full", t0=0):
     """Batched classified two level: ``addr``/``is_write``/``cls`` are
-    ``[V, N]``, way bounds are ``[V, C]``, ``bypass`` is shared ``[C]``."""
+    ``[V, N]``, way bounds are ``[V, C]``, ``bypass`` is shared ``[C]``.
+    Per-class hit/miss counts come back as ``[V, C]``."""
     v = jnp.shape(addr)[0]
     t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
     return jax.vmap(
@@ -937,6 +965,47 @@ def promote_blocks_batch(state: CacheState, queues: Sequence[np.ndarray],
                                    jnp.asarray(t, jnp.int32))
 
 
+def _clean_blocks_impl(state: CacheState, ways_active, quota):
+    s, w = state.tags.shape
+    active = jnp.arange(w, dtype=jnp.int32)[None, :] < ways_active
+    cflat = (state.dirty & active).reshape(-1)
+    lflat = state.lru.reshape(-1)
+    # int32-safe lexsort by (lru, flat index): stable argsort by lru, then
+    # stably float the candidates to the front — candidate order is the
+    # (lru, index) age order with no composite keys or lru sentinels
+    ord1 = jnp.argsort(lflat, stable=True)
+    order = ord1[jnp.argsort(~cflat[ord1], stable=True)]
+    n_cand = jnp.sum(cflat).astype(jnp.int32)
+    take = jnp.minimum(jnp.asarray(quota, jnp.int32), n_cand)
+    flush = jnp.zeros(s * w, bool).at[order].set(
+        jnp.arange(s * w) < take)
+    return CacheState(state.tags, state.lru,
+                      state.dirty & ~flush.reshape(s, w)), take, n_cand - take
+
+
+@jax.jit
+def clean_blocks(state: CacheState, ways_active, quota):
+    """Background cleaner (maintenance): flush the ``quota`` oldest dirty
+    blocks in active ways — age order (lru, flat ``set * W + way`` index)
+    ascending. Flushing clears only the dirty bit; the block stays
+    resident and clean. Returns (state, flushed, dirty_left), matching
+    :func:`clean_blocks_ref` exactly.
+    """
+    return _clean_blocks_impl(state, jnp.asarray(ways_active, jnp.int32),
+                              jnp.asarray(quota, jnp.int32))
+
+
+_clean_blocks_vmapped = jax.jit(jax.vmap(_clean_blocks_impl))
+
+
+def clean_batch(state: CacheState, ways_active, quota):
+    """Per-VM :func:`clean_blocks` over a stacked ``[V, S, W]`` state in
+    one vmapped dispatch. ``ways_active``/``quota`` are ``[V]``; returns
+    (stacked state, ``[V]`` flush counts, ``[V]`` dirty-left counts)."""
+    return _clean_blocks_vmapped(state, jnp.asarray(ways_active, jnp.int32),
+                                 jnp.asarray(quota, jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # numpy reference oracles for the maintenance ops (sequential semantics the
 # vectorized versions above must reproduce exactly — kept for the tests)
@@ -992,3 +1061,20 @@ def promote_blocks_ref(state: CacheState, addrs: np.ndarray,
         dirty[s, w] = False
         n += 1
     return CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)), n
+
+
+def clean_blocks_ref(state: CacheState, ways_active: int, quota: int):
+    """Sequential numpy reference for :func:`clean_blocks`."""
+    tags = np.asarray(state.tags).copy()
+    lru = np.asarray(state.lru).copy()
+    dirty = np.asarray(state.dirty).copy()
+    num_sets, num_ways = tags.shape
+    wa = min(max(int(ways_active), 0), num_ways)
+    cand = [(int(lru[s, w]), s * num_ways + w, s, w)
+            for s in range(num_sets) for w in range(wa) if dirty[s, w]]
+    cand.sort()
+    take = min(max(int(quota), 0), len(cand))
+    for _, _, s, w in cand[:take]:
+        dirty[s, w] = False
+    return (CacheState(jnp.asarray(tags), jnp.asarray(lru), jnp.asarray(dirty)),
+            take, len(cand) - take)

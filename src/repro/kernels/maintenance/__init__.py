@@ -1,12 +1,13 @@
 """Pallas kernels for ETICA's between-interval maintenance (paper §4.2).
 
-The two maintenance scatters over stacked ``[V, S, W]`` cache states —
-eviction (membership mask + dirty-flush count) and promotion
-(first-occurrence dedupe + per-set free-way ranking + scatter) — tiled
-over ``(V, S)`` with the per-VM queue streamed through VMEM, plus the
-fused per-interval dispatch that chains popularity refresh, queue
-building, eviction and promotion into ONE jitted executable with no
-host round-trips between stages (``ops.maintenance_interval``).
+The three maintenance scatters over stacked ``[V, S, W]`` cache states —
+eviction (membership mask + dirty-flush count), promotion
+(first-occurrence dedupe + per-set free-way ranking + scatter), and the
+background cleaner (age-cutoff dirty flush) — tiled over ``(V, S)`` with
+the per-VM queue streamed through VMEM, plus the fused per-interval
+dispatch that chains popularity refresh, queue building, eviction,
+promotion and cleaning into ONE jitted executable with no host
+round-trips between stages (``ops.maintenance_interval``).
 """
-from .ops import (evict, promote, maintenance_interval,  # noqa: F401
+from .ops import (clean, evict, promote, maintenance_interval,  # noqa: F401
                   serving_maintenance)

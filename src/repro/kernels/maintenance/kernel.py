@@ -10,6 +10,13 @@ strips, the same reduction pattern as the other kernels in this repo.
   * **evict**: membership mask (``tags in queue``) per strip, clearing
     matched ways and counting dirty flushes. The ``[TS*W, Q]`` equality
     mask is evaluated in ``QC``-column chunks to bound VMEM.
+  * **clean**: the background dirty-block cleaner. The expensive part —
+    ranking dirty blocks by age — is a per-VM (lru, flat-index) cutoff
+    pair precomputed in the fused dispatch (``ops._clean_cutoffs``); the
+    kernel applies the cutoff per strip: a candidate flushes iff its
+    lexicographic (lru, flat-index) key is <= the cutoff, clearing only
+    the dirty bit (flushed blocks stay resident and clean) and
+    accumulating per-VM flush counts.
   * **promote**: the full queue contract of
     ``repro.core.simulator.promote_blocks_ref`` — first occurrence of an
     address wins (optional O(Q^2/QC) in-kernel dedupe, skippable when
@@ -94,6 +101,63 @@ def evict_scatter(tags, lru, dirty, queue, *, ts: int = DEFAULT_TS,
                    jax.ShapeDtypeStruct((v,), jnp.int32)],
         interpret=interpret,
     )(tags, lru, dirty, queue)
+
+
+# ---------------------------------------------------------------------------
+# clean (background dirty-block flush)
+# ---------------------------------------------------------------------------
+
+def _clean_kernel(dirty_ref, lru_ref, ways_ref, lcut_ref, icut_ref,
+                  odirty_ref, flush_ref, *, ts: int):
+    s_blk = pl.program_id(1)
+    dirty = dirty_ref[0]        # [TS, W] int32 (0/1)
+    lru = lru_ref[0]            # [TS, W]
+    ways = ways_ref[0]          # scalar: active ways for this VM
+    lcut = lcut_ref[0]          # scalar: lru of the last block to flush
+    icut = icut_ref[0]          # scalar: its flat set*W+way index
+    n_ts, w = dirty.shape
+
+    widx = jnp.arange(w, dtype=jnp.int32)
+    sidx = s_blk * ts + jnp.arange(n_ts, dtype=jnp.int32)
+    flat = sidx[:, None] * w + widx[None, :]           # global (set, way) id
+    cand = (dirty > 0) & (widx[None, :] < ways)
+    # the (lru, flat) keys are unique, so the lexicographic cutoff selects
+    # exactly the `take` oldest candidates ranked by ops._clean_cutoffs
+    flush = cand & ((lru < lcut) | ((lru == lcut) & (flat <= icut)))
+    odirty_ref[0] = jnp.where(flush, 0, dirty)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        flush_ref[...] = jnp.zeros_like(flush_ref)
+
+    flush_ref[...] += jnp.sum(flush).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "interpret"))
+def clean_scatter(dirty, lru, ways, lru_cut, idx_cut, *,
+                  ts: int = DEFAULT_TS, interpret: bool = True):
+    """Flush (clear dirty) every dirty active block at or below the
+    per-VM age cutoff.
+
+    ``dirty``/``lru`` are ``[V, S, W]`` int32 (``S`` a multiple of
+    ``ts``); ``ways``/``lru_cut``/``idx_cut`` are ``[V]`` int32 — the
+    cutoff pair is the (lru, flat set*W+way index) key of the last block
+    to flush (``(INT32_MIN, -1)`` = flush nothing). Returns ``(dirty,
+    flushed[V])``.
+    """
+    v, s, w = dirty.shape
+    grid = (v, s // ts)
+    strip = pl.BlockSpec((1, ts, w), lambda i, j: (i, j, 0))
+    per_vm = pl.BlockSpec((1,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_clean_kernel, ts=ts),
+        grid=grid,
+        in_specs=[strip, strip, per_vm, per_vm, per_vm],
+        out_specs=[strip, per_vm],
+        out_shape=[jax.ShapeDtypeStruct(dirty.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((v,), jnp.int32)],
+        interpret=interpret,
+    )(dirty, lru, ways, lru_cut, idx_cut)
 
 
 # ---------------------------------------------------------------------------

@@ -10,10 +10,11 @@ compiled on TPU — ``interpret=None`` picks by backend, overridable with
 the batched :class:`~repro.core.controller.EticaCache` as ONE jitted
 dispatch: Eq. 1 contributions -> device popularity-table update ->
 eviction-queue build -> evict kernel -> free-space recount ->
-promotion-queue build -> promote kernel. The post-eviction state feeds
-the promotion stage on device — there is no ``np.asarray(state)`` sync
-anywhere between stages; only the final per-VM counts ever reach the
-host.
+promotion-queue build -> promote kernel -> background cleaner (age
+cutoff + clean kernel, when ``clean_quota > 0``). The post-eviction
+state feeds the promotion stage on device and the post-promotion state
+feeds the cleaner — there is no ``np.asarray(state)`` sync anywhere
+between stages; only the final per-VM counts ever reach the host.
 """
 from __future__ import annotations
 
@@ -27,7 +28,8 @@ from repro.core import popularity as pop
 from repro.core.simulator import CacheState, _next_pow2, _pad_addrs_batch
 from repro.kernels import use_interpret
 
-from .kernel import DEFAULT_QC, DEFAULT_TS, evict_scatter, promote_scatter
+from .kernel import (DEFAULT_QC, DEFAULT_TS, clean_scatter, evict_scatter,
+                     promote_scatter)
 
 
 def _tiles(s: int, ts: int) -> tuple[int, int]:
@@ -71,6 +73,71 @@ def _promote_state(state: CacheState, queue, ways, t, *, ts, qc, dedupe,
         num_sets=s, ts=ts, qc=qc, dedupe=dedupe, interpret=interpret)
     return CacheState(tags[:, :s], lru[:, :s],
                       dirty[:, :s].astype(bool)), n
+
+
+def _clean_cutoffs(dirty, lru, ways, quota):
+    """Per-VM age cutoffs for the background cleaner.
+
+    Candidates are the dirty blocks in active ways, aged by the unique
+    lexicographic key (lru ascending, flat ``set * W + way`` index
+    ascending). Returns ``(lru_cut[V], idx_cut[V], take[V], n_cand[V])``
+    where the cutoff pair is the key of the ``take``-th oldest candidate
+    (``take = min(quota, n_cand)``); sentinel ``(INT32_MIN, -1)`` when
+    nothing flushes. The kernel then flushes exactly the candidates with
+    key <= cutoff.
+
+    The two-pass stable argsort is an int32-safe lexsort: sorting by lru
+    first and then (stably) by not-candidate yields candidates first, in
+    (lru, index) order — no composite 64-bit keys, no sentinel values
+    that could collide with real lru timestamps.
+    """
+    v, s, w = dirty.shape
+    active = jnp.arange(w, dtype=jnp.int32)[None, None, :] < ways[:, None, None]
+    cflat = (dirty & active).reshape(v, s * w)
+    lflat = lru.reshape(v, s * w)
+    ord1 = jnp.argsort(lflat, axis=1, stable=True)
+    c1 = jnp.take_along_axis(cflat, ord1, axis=1)
+    order = jnp.take_along_axis(ord1, jnp.argsort(~c1, axis=1, stable=True),
+                                axis=1)
+    n_cand = jnp.sum(cflat, axis=1).astype(jnp.int32)
+    take = jnp.minimum(jnp.asarray(quota, jnp.int32), n_cand)
+    kth = jnp.maximum(take - 1, 0)
+    idx_k = jnp.take_along_axis(order, kth[:, None], axis=1)[:, 0]
+    lru_k = jnp.take_along_axis(lflat, idx_k[:, None], axis=1)[:, 0]
+    has = take > 0
+    return (jnp.where(has, lru_k, jnp.int32(-2**31)).astype(jnp.int32),
+            jnp.where(has, idx_k, -1).astype(jnp.int32), take, n_cand)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "interpret"))
+def _clean_state(state: CacheState, ways, quota, *, ts, interpret):
+    v, s, w = state.tags.shape
+    lcut, icut, take, n_cand = _clean_cutoffs(state.dirty, state.lru, ways,
+                                              quota)
+    ts, s_pad = _tiles(s, ts)
+    dirty, cleaned = clean_scatter(
+        _pad_sets(state.dirty.astype(jnp.int32), s_pad, 0),
+        _pad_sets(state.lru, s_pad, -1),
+        ways, lcut, icut, ts=ts, interpret=interpret)
+    return (CacheState(state.tags, state.lru, dirty[:, :s].astype(bool)),
+            cleaned, n_cand - take)
+
+
+def clean(state: CacheState, ways, quota, *, ts: int = DEFAULT_TS,
+          interpret: bool | None = None):
+    """Kernel-backed background cleaner over stacked states.
+
+    Flushes (clears the dirty bit of) up to ``quota[v]`` of VM ``v``'s
+    oldest dirty active blocks — age order (lru, flat index) ascending;
+    flushed blocks stay resident and clean. ``ways``/``quota`` are
+    ``[V]`` (scalars broadcast). Returns ``(state, flushed[V],
+    dirty_left[V])``, oracle-identical to ``ref.clean_ref``.
+    """
+    v = state.tags.shape[0]
+    ways = jnp.broadcast_to(jnp.asarray(ways, jnp.int32), (v,))
+    quota = jnp.broadcast_to(jnp.asarray(quota, jnp.int32), (v,))
+    interpret = use_interpret() if interpret is None else interpret
+    return _clean_state(state, ways, quota, ts=ts, interpret=interpret)
 
 
 def _queue_matrix(queues) -> np.ndarray:
@@ -138,11 +205,12 @@ def promote(state: CacheState, queues, ways, t, *, ts: int = DEFAULT_TS,
 # ---------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("evict_frac", "decay", "ts", "qc", "interpret"))
+    jax.jit, static_argnames=("evict_frac", "decay", "clean_quota", "ts",
+                              "qc", "interpret"))
 def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
                       dist, served, waddr, wlen, ways, t, *,
-                      evict_frac: float, decay: float, ts: int, qc: int,
-                      interpret: bool):
+                      evict_frac: float, decay: float, clean_quota: int,
+                      ts: int, qc: int, interpret: bool):
     v, s, w = ssd.tags.shape
     nval = jnp.asarray(wlen, jnp.int32)
     live = nval > 0
@@ -175,12 +243,26 @@ def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
                                    jnp.asarray(t, jnp.int32), ts=ts,
                                    qc=min(qc, pqueue.shape[1]),
                                    dedupe=False, interpret=interpret)
-    return ssd, table, flushed, promoted, eqlen, pqlen, drops
+
+    # 4) background cleaner (third stage): age-ranked scan over the
+    #    post-promotion dirty blocks, flushing up to `clean_quota` per
+    #    live VM. Rides the same dispatch — the per-VM counts join the
+    #    others in the single end-of-interval host sync.
+    if clean_quota > 0:
+        quota_v = jnp.where(live, jnp.int32(clean_quota), 0)
+        ssd, cleaned, dirty_left = _clean_state(ssd, ways, quota_v, ts=ts,
+                                                interpret=interpret)
+    else:
+        cleaned = jnp.zeros(v, jnp.int32)
+        dirty_left = jnp.sum(ssd.dirty & active, axis=(1, 2)).astype(jnp.int32)
+    return (ssd, table, flushed, promoted, eqlen, pqlen, drops, cleaned,
+            dirty_left)
 
 
 def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
                          dist, served, waddr, wlen, ways, t, *,
                          evict_frac: float, decay: float,
+                         clean_quota: int = 0,
                          ts: int = DEFAULT_TS, qc: int = DEFAULT_QC,
                          interpret: bool | None = None):
     """One interval of ETICA maintenance for all VMs, fused.
@@ -197,20 +279,25 @@ def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
       wlen: ``[V]`` valid window lengths (0 = idle VM, no maintenance).
       ways/t: ``[V]`` active SSD ways and per-VM clocks.
       evict_frac/decay: §4.2.1 bottom-fraction and aging factor.
+      clean_quota: background-cleaner flush budget per live VM per
+        interval (0 disables the third stage entirely).
 
     Returns ``(ssd, table, flushed[V], promoted[V], evict_qlen[V],
-    promo_qlen[V], pop_drops[V])`` — states and table stay on device; the
-    count vectors are the only thing a caller needs to sync for Stats.
-    ``pop_drops`` is the number of popularity entries pushed past the
-    table's ``K`` slots by this merge (``Stats.pop_drops``).
+    promo_qlen[V], pop_drops[V], cleaned[V], dirty_left[V])`` — states
+    and table stay on device; the count vectors are the only thing a
+    caller needs to sync for Stats. ``pop_drops`` is the number of
+    popularity entries pushed past the table's ``K`` slots by this merge
+    (``Stats.pop_drops``); ``cleaned`` is the cleaner's flush count and
+    ``dirty_left`` the dirty blocks still resident in active ways after
+    the interval (``Stats.flushes`` / ``Stats.dirty_resident``).
     """
     interpret = use_interpret() if interpret is None else interpret
     return _maintenance_impl(
         ssd, table, jnp.asarray(dist, jnp.int32), jnp.asarray(served, bool),
         jnp.asarray(waddr, jnp.int32), jnp.asarray(wlen, jnp.int32),
         jnp.asarray(ways, jnp.int32), jnp.asarray(t, jnp.int32),
-        evict_frac=float(evict_frac), decay=float(decay), ts=ts, qc=qc,
-        interpret=interpret)
+        evict_frac=float(evict_frac), decay=float(decay),
+        clean_quota=int(clean_quota), ts=ts, qc=qc, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -228,10 +315,11 @@ def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
 # counts. Only the final (order, take) queues and the updated table ever
 # reach the host, which applies the releases to its page-table dicts.
 
-@functools.partial(jax.jit, static_argnames=("num_tenants", "decay"))
+@functools.partial(jax.jit,
+                   static_argnames=("num_tenants", "decay", "clean_quota"))
 def _serving_impl(table: pop.PopularityTable, dist, served, waddr, wtenant,
-                  cand_sid, cand_pages, over, cache_size, *,
-                  num_tenants: int, decay: float):
+                  cand_sid, cand_pages, over, cache_size, dirty_age, *,
+                  num_tenants: int, decay: float, clean_quota: int):
     t_axis, n = num_tenants, waddr.shape[0]
 
     # 1) Eq. 1 contributions over the MIXED window (distances were
@@ -276,12 +364,27 @@ def _serving_impl(table: pop.PopularityTable, dist, served, waddr, wtenant,
         jnp.where(valid, cand_pages, 0), eorder, axis=1)
     cum_before = jnp.cumsum(pages_sorted, axis=1) - pages_sorted
     take = jnp.clip(over[:, None] - cum_before, 0, pages_sorted)
-    return table, drops, eorder.astype(jnp.int32), take.astype(jnp.int32)
+
+    # 5) background cleaner: age-rank each tenant's dirty pages (ages are
+    #    unique global append sequence numbers, so the order is total)
+    #    and pick the oldest `clean_quota` to flush this interval
+    if clean_quota > 0:
+        dvalid = dirty_age >= 0
+        dkey = jnp.where(dvalid, dirty_age, jnp.int32(2**31 - 1))
+        ranks = jnp.argsort(jnp.argsort(dkey, axis=1, stable=True), axis=1)
+        n_dirty = jnp.sum(dvalid, axis=1).astype(jnp.int32)
+        dtake = jnp.minimum(jnp.int32(clean_quota), n_dirty)
+        fpick = (dvalid & (ranks < dtake[:, None])).astype(jnp.int32)
+    else:
+        fpick = jnp.zeros(dirty_age.shape, jnp.int32)
+    return (table, drops, eorder.astype(jnp.int32), take.astype(jnp.int32),
+            fpick)
 
 
 def serving_maintenance(table: pop.PopularityTable, dist, served, waddr,
                         wtenant, cand_sid, cand_pages, over, cache_size,
-                        *, decay: float):
+                        *, decay: float, dirty_age=None,
+                        clean_quota: int = 0):
     """One fused serving-maintenance interval for all tenants.
 
     Args:
@@ -301,18 +404,29 @@ def serving_maintenance(table: pop.PopularityTable, dist, served, waddr,
       cache_size: Eq. 1 normalizer (the controller passes the summed
         tenant quotas).
       decay: popularity aging factor.
+      dirty_age: optional ``[T, Dmax]`` ages (unique append sequence
+        numbers, ``-1`` = padding) of each tenant's dirty pages for the
+        background cleaner; required when ``clean_quota > 0``.
+      clean_quota: dirty pages flushed per tenant per interval (0
+        disables the cleaner stage).
 
-    Returns ``(table, pop_drops[T], order[T, Smax], take[T, Smax])``:
-    the updated device table, per-tenant merge-overflow drops, and the
-    eviction queue — ``order[t, i]`` indexes into ``cand_sid[t]``
-    coldest-first, ``take[t, i]`` is how many of that session's resident
-    pages to release (0 past the quota point). Inputs are padded to
+    Returns ``(table, pop_drops[T], order[T, Smax], take[T, Smax],
+    fpick[T, Dmax])``: the updated device table, per-tenant
+    merge-overflow drops, the eviction queue — ``order[t, i]`` indexes
+    into ``cand_sid[t]`` coldest-first, ``take[t, i]`` is how many of
+    that session's resident pages to release (0 past the quota point) —
+    and the cleaner's 0/1 flush picks over ``dirty_age``'s columns
+    (all-zero when the cleaner is off). Inputs are padded to
     power-of-two buckets so executables key on bucket sizes only.
     """
     n = int(np.shape(waddr)[0])
     nb = _next_pow2(max(n, 64))
     t_axis, smax = np.shape(cand_sid)
     sb = _next_pow2(max(smax, 8))
+    if dirty_age is None:
+        dirty_age = np.full((t_axis, 1), -1, np.int32)
+    dmax = int(np.shape(dirty_age)[1])
+    db = _next_pow2(max(dmax, 8))
 
     def padn(x, fill, dtype):
         x = jnp.asarray(x, dtype)
@@ -322,9 +436,13 @@ def serving_maintenance(table: pop.PopularityTable, dist, served, waddr,
                        ((0, 0), (0, sb - smax)), constant_values=-1)
     cand_pages = jnp.pad(jnp.asarray(cand_pages, jnp.int32),
                          ((0, 0), (0, sb - smax)), constant_values=0)
-    return _serving_impl(
+    dirty_age = jnp.pad(jnp.asarray(dirty_age, jnp.int32),
+                        ((0, 0), (0, db - dmax)), constant_values=-1)
+    table, drops, eorder, take, fpick = _serving_impl(
         table, padn(dist, -1, jnp.int32), padn(served, False, bool),
         padn(waddr, 0, jnp.int32), padn(wtenant, -1, jnp.int32),
         cand_sid, cand_pages, jnp.asarray(over, jnp.int32),
-        jnp.asarray(cache_size, jnp.float32),
-        num_tenants=t_axis, decay=float(decay))
+        jnp.asarray(cache_size, jnp.float32), dirty_age,
+        num_tenants=t_axis, decay=float(decay),
+        clean_quota=int(clean_quota))
+    return table, drops, eorder, take, fpick[:, :dmax]

@@ -32,6 +32,35 @@ def evict_ref(tags, lru, dirty, queues):
     return tags, lru, dirty, flushed
 
 
+def clean_ref(tags, lru, dirty, ways, quota):
+    """Per-VM background cleaning over stacked states (third stage).
+
+    Flush candidates are the dirty blocks in active ways; age order is
+    (``lru`` ascending, flat ``set * W + way`` index ascending) — a total
+    order because flat indices are unique. The first ``quota[v]``
+    candidates flush: the dirty bit clears, tags/lru stay untouched (a
+    flushed block remains resident and clean). Returns ``(tags, lru,
+    dirty, flushed[V])`` copies.
+    """
+    tags = np.asarray(tags).copy()
+    lru = np.asarray(lru).copy()
+    dirty = np.asarray(dirty).copy()
+    ways = np.asarray(ways).reshape(-1)
+    quota = np.asarray(quota).reshape(-1)
+    num_vms, num_sets, num_ways = tags.shape
+    flushed = np.zeros(num_vms, np.int32)
+    for v in range(num_vms):
+        wa = min(max(int(ways[v]), 0), num_ways)
+        cand = [(int(lru[v, s, w]), s * num_ways + w, s, w)
+                for s in range(num_sets) for w in range(wa)
+                if dirty[v, s, w]]
+        cand.sort()
+        for _, _, s, w in cand[: max(int(quota[v]), 0)]:
+            dirty[v, s, w] = 0
+            flushed[v] += 1
+    return tags, lru, dirty, flushed
+
+
 def promote_ref(tags, lru, dirty, queues, ways, t):
     """Per-VM promotion over stacked states (sequential queue drain).
 

@@ -80,6 +80,9 @@ class TwoTierConfig:
     materialize: bool = True      # keep device page pools in sync; off =
                                   # controller-only mode for huge synthetic
                                   # runs (Stats identical, no decode)
+    clean_quota: int = 0          # deferred write-back: max dirty-page
+                                  # flushes per tenant per maintenance
+                                  # interval (0 = eager commit on append)
 
     @property
     def page_bytes(self) -> int:
@@ -106,6 +109,11 @@ class Stats:
     latency_s: float = 0.0
     sessions_ended: int = 0        # churn: retired sessions
     pop_drops: int = 0             # [T, K] table merge-overflow drops
+    flushes: int = 0               # background-cleaner page commits
+    evict_flushes: int = 0         # dirty pages committed on slot release
+    dirty_resident: int = 0        # gauge: uncommitted pages right now
+    dirty_dropped: int = 0         # dirty pages retired with the session
+    #                                (no DMA: host copy freed uncommitted)
 
     def as_dict(self):
         return dataclasses.asdict(self) | {
@@ -256,6 +264,12 @@ class TwoTierKVManager:
         self.stats = Stats()
         self._since_maint = 0
         self._since_resize = 0
+        # deferred write-back (cfg.clean_quota > 0): uncommitted appended
+        # pages, keyed (sid, lp) -> global append sequence (the age the
+        # cleaner ranks by). Dirty pages are always HBM-resident: they
+        # enter at append time and leave via flush or drop at release.
+        self._dirty: dict[tuple[int, int], int] = {}
+        self._append_seq = 0
 
     # -- session lifecycle ------------------------------------------------
     def new_session(self, sid: int, tenant: int):
@@ -267,7 +281,7 @@ class TwoTierKVManager:
         simply freed)."""
         sess = self.sessions[sid]
         for lp in list(sess.hbm_slots):
-            self._release_slot(sid, lp)
+            self._release_slot(sid, lp, drop=True)
         for lp in sess.pages:
             self.host.pop((sid, lp), None)
         del self.sessions[sid]
@@ -283,13 +297,37 @@ class TwoTierKVManager:
         self.tenant_used[sess.tenant] += 1
         return slot
 
-    def _release_slot(self, sid: int, lp: int):
+    def _release_slot(self, sid: int, lp: int, drop: bool = False):
+        """Free a session's HBM slot. A dirty (uncommitted) page must
+        settle before its only fast copy goes away: normally it is
+        force-flushed to the host pool (``evict_flushes`` — the DMA write
+        the cleaner failed to get to first); with ``drop`` the session is
+        retiring, so the page is discarded uncommitted (no DMA)."""
         sess = self.sessions[sid]
         slot = sess.hbm_slots.pop(lp, None)
         if slot is not None:
             self.slot_owner.pop(slot, None)
             self.free.append(slot)
             self.tenant_used[sess.tenant] -= 1
+            key = (sid, lp)
+            if key in self._dirty:
+                if drop:
+                    self._dirty.pop(key)
+                    self.stats.dirty_dropped += 1
+                    self.stats.dirty_resident = len(self._dirty)
+                else:
+                    self._flush_page(key, evict=True)
+
+    def _flush_page(self, key: tuple[int, int], evict: bool = False):
+        """Commit an uncommitted page to the host pool: the deferred DMA
+        write happens now (cleaner flush or eviction-forced flush)."""
+        self._dirty.pop(key)
+        self.stats.dma_write_bytes += self.cfg.page_bytes
+        if evict:
+            self.stats.evict_flushes += 1
+        else:
+            self.stats.flushes += 1
+        self.stats.dirty_resident = len(self._dirty)
 
     def _scores(self, tenants: np.ndarray, sids: np.ndarray) -> np.ndarray:
         """Popularity of (tenant, sid) pairs — float32, bit-identical
@@ -372,7 +410,15 @@ class TwoTierKVManager:
         lp = len(sess.pages)
         sess.pages.append(lp)
         self.host[(sid, lp)] = (np.asarray(k_page), np.asarray(v_page))
-        self.stats.dma_write_bytes += self.cfg.page_bytes
+        if self.cfg.clean_quota > 0:
+            # deferred write-back: the page data lands in the host dict
+            # (datapath unchanged) but the DMA commit is deferred — the
+            # background cleaner pays it later, or eviction forces it
+            self._dirty[(sid, lp)] = self._append_seq
+            self.stats.dirty_resident = len(self._dirty)
+        else:
+            self.stats.dma_write_bytes += self.cfg.page_bytes
+        self._append_seq += 1
         self.stats.appends += 1
         slot = self._alloc_slot(sid, lp)
         if self.cfg.materialize:
@@ -414,6 +460,7 @@ class TwoTierKVManager:
                 self._maintain_batched(exclude_sid=active_sid)
             else:
                 self._update_popularity()
+                self._clean_tick()
                 self._evict_cold(exclude_sid=active_sid)
         if self._since_resize >= cfg.resize_interval:
             self._since_resize = 0
@@ -473,7 +520,40 @@ class TwoTierKVManager:
                     self._release_slot(sid, lp)
                     over -= 1
 
+    def _clean_tick(self):
+        """Background cleaner (sequential oracle): commit the
+        ``clean_quota`` oldest uncommitted pages per tenant, oldest
+        (lowest append sequence) first. Runs BEFORE eviction, so pages the
+        cleaner reaches in time count as ``flushes``, not
+        ``evict_flushes`` — the batched path applies its flush picks in
+        the same order."""
+        if self.cfg.clean_quota <= 0 or not self._dirty:
+            return
+        per: list[list] = [[] for _ in range(self.num_tenants)]
+        for key, seq in self._dirty.items():
+            per[self.sessions[key[0]].tenant].append((seq, key))
+        for t in range(self.num_tenants):
+            per[t].sort()
+            for _, key in per[t][: self.cfg.clean_quota]:
+                self._flush_page(key)
+
     # ---- batched path (device table + fused dispatch) -------------------
+    def _dirty_by_tenant(self):
+        """Per-tenant dirty pages in age order: ``(ditems, dirty_age)``
+        where ``ditems[t]`` is ``[(seq, sid, lp), ...]`` sorted ascending
+        and ``dirty_age`` is the ``[T, max_dirty]`` matrix (``-1`` pad)
+        the fused dispatch ranks."""
+        ditems: list[list] = [[] for _ in range(self.num_tenants)]
+        for (sid, lp), seq in self._dirty.items():
+            ditems[self.sessions[sid].tenant].append((seq, sid, lp))
+        dmax = max([len(d) for d in ditems] + [1])
+        dirty_age = np.full((self.num_tenants, dmax), -1, np.int32)
+        for t, d in enumerate(ditems):
+            d.sort()
+            for i, (seq, _, _) in enumerate(d):
+                dirty_age[t, i] = seq
+        return ditems, dirty_age
+
     def _maintain_batched(self, exclude_sid: int | None = None):
         addr, tenant, wr = self._window()
         if addr.size == 0:
@@ -489,17 +569,27 @@ class TwoTierKVManager:
                 cand_sid[t, i] = sid
                 cand_pages[t, i] = n
         over = self.tenant_used - self.tenant_quota
-        self._table, drops, eorder, take = serving_maintenance(
+        ditems, dirty_age = self._dirty_by_tenant()
+        self._table, drops, eorder, take, fpick = serving_maintenance(
             self._table, r.dist, r.served, addr, tenant,
             cand_sid, cand_pages, over,
             max(int(self.tenant_quota.sum()), 1),
-            decay=self.cfg.popularity_decay)
-        # one host sync per interval: queues + table mirror
+            decay=self.cfg.popularity_decay,
+            dirty_age=dirty_age, clean_quota=self.cfg.clean_quota)
+        # one host sync per interval: queues + cleaner picks + table mirror
         eorder = np.asarray(eorder)
         take = np.asarray(take)
+        fpick = np.asarray(fpick)
         self._pop_addr = np.asarray(self._table.addr)
         self._pop_val = np.asarray(self._table.val)
         self.stats.pop_drops += int(np.asarray(drops).sum())
+        # cleaner picks apply BEFORE the eviction queue (both were ranked
+        # against the same pre-dispatch state): a page the cleaner reaches
+        # is a `flushes` commit; eviction then releases it clean
+        for t, d in enumerate(ditems):
+            for i, (_, sid, lp) in enumerate(d):
+                if fpick[t, i]:
+                    self._flush_page((sid, lp))
         for t in range(self.num_tenants):
             if over[t] <= 0:
                 continue

@@ -1,0 +1,286 @@
+"""Prometheus text-format telemetry export for the cache controllers.
+
+One module, three layers:
+
+* :class:`Metric` + :func:`render` — a tiny, dependency-free renderer of
+  the Prometheus text exposition format v0.0.4 (``# HELP`` / ``# TYPE``
+  headers, ``name{label="v"} value`` samples, stable ordering, label
+  escaping). No client library exists in the image, and none is needed:
+  the format is line-oriented text.
+* :func:`collect_cache` / :func:`collect_serving` — adapters that turn a
+  controller's per-VM stats dicts (:class:`repro.core.controller
+  .EticaCache` / ``PartitionedSingleLevelCache``) or a serving manager's
+  :class:`repro.kvcache.manager.Stats` into metric families, including
+  the background cleaner's channels (``flushes``, ``evict_flushes``,
+  ``dirty_resident``), the popularity-table overflow counter
+  (``pop_drops``), the classifier bypass channel, and — when a
+  classifier is configured — per-(VM, IO-class) served hit/miss counts.
+* :func:`parse_exposition` — a strict parser/validator for the same
+  format, used by the golden tests and the fig14 self-check to assert
+  the emitted text round-trips.
+
+Metric names are a stable public contract (tests/test_metrics_export.py
+pins them); extend, do not rename.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = [
+    "Metric", "render", "render_cache", "render_serving",
+    "collect_cache", "collect_serving", "parse_exposition",
+]
+
+_NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*\Z")
+_LABEL_RE = re.compile(r"[a-zA-Z_][a-zA-Z0-9_]*\Z")
+_SAMPLE_RE = re.compile(
+    r"(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>.*)\})?"
+    r"\s+(?P<value>\S+)\Z")
+_LABEL_PAIR_RE = re.compile(
+    r'\s*(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>(?:[^"\\]|\\.)*)"\s*(?:,|\Z)')
+
+
+@dataclasses.dataclass
+class Metric:
+    """One metric family: a name, a type, help text, and samples.
+
+    ``samples`` is a list of ``(labels, value)`` pairs where ``labels``
+    is a plain ``{label: value}`` dict (may be empty)."""
+    name: str
+    mtype: str                     # "counter" | "gauge"
+    help: str
+    samples: list = dataclasses.field(default_factory=list)
+
+    def add(self, labels: dict, value) -> "Metric":
+        self.samples.append((dict(labels), value))
+        return self
+
+
+def _escape_label(v) -> str:
+    return (str(v).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def _escape_help(v: str) -> str:
+    return v.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _format_value(v) -> str:
+    f = float(v)
+    if f == int(f) and abs(f) < 2**53:
+        return str(int(f))
+    return repr(f)
+
+
+def render(metrics: list) -> str:
+    """Render metric families as Prometheus text exposition v0.0.4.
+
+    Deterministic: families render in list order, samples in insertion
+    order, label keys in insertion order — collectors insert in a fixed
+    order, so the full text is stable run to run (the golden tests rely
+    on this)."""
+    out = []
+    for m in metrics:
+        if not _NAME_RE.match(m.name):
+            raise ValueError(f"bad metric name: {m.name!r}")
+        if m.mtype not in ("counter", "gauge"):
+            raise ValueError(f"bad metric type: {m.mtype!r}")
+        out.append(f"# HELP {m.name} {_escape_help(m.help)}")
+        out.append(f"# TYPE {m.name} {m.mtype}")
+        for labels, value in m.samples:
+            for k in labels:
+                if not _LABEL_RE.match(k):
+                    raise ValueError(f"bad label name: {k!r}")
+            lbl = ",".join(f'{k}="{_escape_label(v)}"'
+                           for k, v in labels.items())
+            lbl = "{" + lbl + "}" if lbl else ""
+            out.append(f"{m.name}{lbl} {_format_value(value)}")
+    return "\n".join(out) + "\n"
+
+
+def parse_exposition(text: str) -> dict:
+    """Parse (and thereby validate) Prometheus exposition text.
+
+    Returns ``{name: {"type": t, "help": h, "samples": {label_key:
+    value}}}`` with ``label_key`` a tuple of sorted ``(k, v)`` pairs.
+    Raises ``ValueError`` on malformed lines, samples without a
+    preceding ``# TYPE``, or duplicate samples."""
+    families: dict = {}
+    current = None
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            _, _, rest = line.partition("# HELP ")
+            name, _, help_text = rest.partition(" ")
+            families.setdefault(name, {"type": None, "help": None,
+                                       "samples": {}})
+            families[name]["help"] = help_text
+            continue
+        if line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, mtype = rest.partition(" ")
+            if mtype not in ("counter", "gauge", "histogram", "summary",
+                             "untyped"):
+                raise ValueError(f"line {ln}: bad TYPE {mtype!r}")
+            families.setdefault(name, {"type": None, "help": None,
+                                       "samples": {}})
+            families[name]["type"] = mtype
+            current = name
+            continue
+        if line.startswith("#"):
+            continue                           # comment
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {ln}: malformed sample {line!r}")
+        name = m.group("name")
+        if name not in families or families[name]["type"] is None:
+            raise ValueError(f"line {ln}: sample {name!r} without # TYPE")
+        if current != name:
+            raise ValueError(f"line {ln}: sample {name!r} outside its "
+                             f"family block")
+        labels = {}
+        raw = m.group("labels")
+        if raw is not None:
+            pos = 0
+            while pos < len(raw):
+                pm = _LABEL_PAIR_RE.match(raw, pos)
+                if not pm:
+                    raise ValueError(f"line {ln}: malformed labels {raw!r}")
+                labels[pm.group("k")] = pm.group("v")
+                pos = pm.end()
+        key = tuple(sorted(labels.items()))
+        if key in families[name]["samples"]:
+            raise ValueError(f"line {ln}: duplicate sample {name}{key}")
+        families[name]["samples"][key] = float(m.group("value"))
+    return families
+
+
+# ---------------------------------------------------------------------------
+# collectors
+# ---------------------------------------------------------------------------
+
+def _stat(d: dict, key: str) -> float:
+    return float(d.get(key, 0.0))
+
+
+def collect_cache(cache, prefix: str = "etica") -> list:
+    """Metric families from an interval controller — works for both
+    :class:`~repro.core.controller.EticaCache` and the one-level
+    :class:`~repro.core.controller.PartitionedSingleLevelCache` (the
+    DRAM-level hit family simply stays 0 there).
+
+    Every family emits a sample for every VM even when the count is 0,
+    so scrapes are fixed-shape and rate() never sees series appear."""
+    stats = cache.stats
+    vms = [str(v) for v in range(len(stats))]
+    req = Metric(f"{prefix}_requests_total", "counter",
+                 "Requests entering the cache datapath, by operation.")
+    hits = Metric(f"{prefix}_hits_total", "counter",
+                  "Served cache hits, by level and operation.")
+    ssd_w = Metric(f"{prefix}_ssd_writes_total", "counter",
+                   "Blocks committed to the SSD level (endurance metric).")
+    disk_r = Metric(f"{prefix}_disk_reads_total", "counter",
+                    "Blocks read from the disk subsystem.")
+    disk_w = Metric(f"{prefix}_disk_writes_total", "counter",
+                    "Blocks written to the disk subsystem "
+                    "(misses, flushes, cleaning).")
+    flushes = Metric(f"{prefix}_flushes_total", "counter",
+                     "Dirty blocks flushed by the background cleaner.")
+    ev_fl = Metric(f"{prefix}_evict_flushes_total", "counter",
+                   "Dirty blocks flushed by eviction or resize.")
+    dirty = Metric(f"{prefix}_dirty_resident", "gauge",
+                   "Dirty SSD blocks resident after the last "
+                   "maintenance interval.")
+    byp = Metric(f"{prefix}_bypassed_total", "counter",
+                 "Requests routed straight to disk by the IO classifier.")
+    drops = Metric(f"{prefix}_pop_drops_total", "counter",
+                   "Popularity-table merge-overflow drops.")
+    lat = Metric(f"{prefix}_latency_seconds_total", "counter",
+                 "Modeled service latency, summed over requests.")
+    for v, d in zip(vms, stats):
+        req.add({"vm": v, "op": "read"}, _stat(d, "reads"))
+        req.add({"vm": v, "op": "write"}, _stat(d, "writes"))
+        hits.add({"vm": v, "level": "dram", "op": "read"},
+                 _stat(d, "read_hits_l1"))
+        hits.add({"vm": v, "level": "ssd", "op": "read"},
+                 _stat(d, "read_hits_l2"))
+        hits.add({"vm": v, "level": "ssd", "op": "write"},
+                 _stat(d, "write_hits_l2"))
+        ssd_w.add({"vm": v}, _stat(d, "cache_writes_l2"))
+        disk_r.add({"vm": v}, _stat(d, "disk_reads"))
+        disk_w.add({"vm": v}, _stat(d, "disk_writes"))
+        flushes.add({"vm": v}, _stat(d, "flushes"))
+        ev_fl.add({"vm": v}, _stat(d, "evict_flushes"))
+        dirty.add({"vm": v}, _stat(d, "dirty_resident"))
+        byp.add({"vm": v}, _stat(d, "bypassed"))
+        drops.add({"vm": v}, _stat(d, "pop_drops"))
+        lat.add({"vm": v}, _stat(d, "latency_sum"))
+    out = [req, hits, ssd_w, disk_r, disk_w, flushes, ev_fl, dirty, byp,
+           drops, lat]
+    if getattr(cache, "classifier", None) is not None and \
+            hasattr(cache, "cls_hits"):
+        names = [c.name for c in cache.classifier.classes]
+        cls = Metric(f"{prefix}_class_requests_total", "counter",
+                     "Served requests by VM, IO class, and hit/miss "
+                     "outcome (bypassed requests excluded).")
+        for v in range(len(stats)):
+            for ci, cname in enumerate(names):
+                cls.add({"vm": str(v), "io_class": cname, "result": "hit"},
+                        int(cache.cls_hits[v, ci]))
+                cls.add({"vm": str(v), "io_class": cname, "result": "miss"},
+                        int(cache.cls_miss[v, ci]))
+        out.append(cls)
+    return out
+
+
+def collect_serving(mgr, prefix: str = "etica_serving") -> list:
+    """Metric families from a :class:`~repro.kvcache.manager
+    .TwoTierKVManager` — the serving analog of :func:`collect_cache`,
+    including the deferred write-back channels."""
+    s = mgr.stats
+    def counter(name, help_, value):
+        return Metric(f"{prefix}_{name}", "counter", help_).add({}, value)
+    dirty = Metric(f"{prefix}_dirty_resident", "gauge",
+                   "Uncommitted (dirty) KV pages resident in HBM.")
+    dirty.add({}, s.dirty_resident)
+    return [
+        counter("activations_total",
+                "Session activations (tier-1 reads).", s.activations),
+        counter("hits_total",
+                "Fully HBM-resident activations.", s.hits),
+        counter("appends_total",
+                "KV pages generated (WBWO commits).", s.appends),
+        counter("dma_read_bytes_total",
+                "Host-to-HBM DMA bytes (misses, promotions).",
+                s.dma_read_bytes),
+        counter("dma_write_bytes_total",
+                "HBM-to-host DMA bytes (the wear analog).",
+                s.dma_write_bytes),
+        counter("latency_seconds_total",
+                "Modeled DMA latency, summed.", s.latency_s),
+        counter("sessions_ended_total",
+                "Retired sessions (churn).", s.sessions_ended),
+        counter("pop_drops_total",
+                "Popularity-table merge-overflow drops.", s.pop_drops),
+        counter("flushes_total",
+                "Dirty pages committed by the background cleaner.",
+                s.flushes),
+        counter("evict_flushes_total",
+                "Dirty pages committed on forced slot release.",
+                s.evict_flushes),
+        counter("dirty_dropped_total",
+                "Dirty pages retired with their session (no DMA).",
+                s.dirty_dropped),
+        dirty,
+    ]
+
+
+def render_cache(cache, prefix: str = "etica") -> str:
+    return render(collect_cache(cache, prefix))
+
+
+def render_serving(mgr, prefix: str = "etica_serving") -> str:
+    return render(collect_serving(mgr, prefix))

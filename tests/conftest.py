@@ -122,3 +122,19 @@ except ModuleNotFoundError:
     stub.__is_stub__ = True
     sys.modules["hypothesis"] = stub
     sys.modules["hypothesis.strategies"] = strategies_mod
+
+
+# The property suites compile hundreds of distinct executable shapes
+# (every hypothesis-drawn trace length is its own jit cache entry).
+# Left to accumulate over the whole run, the CPU backend eventually
+# segfaults inside XLA's backend_compile, so bound the live-executable
+# population by dropping jit caches at every module boundary. Costs a
+# few recompiles per module; buys a suite-length-independent process.
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jit_cache():
+    yield
+    import jax
+    jax.clear_caches()

@@ -242,7 +242,7 @@ def test_popularity_merge_overflow_drops(k, d, seed):
 
 
 def test_maintenance_interval_surfaces_pop_drops():
-    """The fused interval's 7-tuple carries the merge-drop counter:
+    """The fused interval's 9-tuple carries the merge-drop counter:
     a 4-entry popularity table fed 16 distinct addresses drops 12."""
     from repro.core import reuse
     from repro.core.policies import Policy
@@ -258,7 +258,7 @@ def test_maintenance_interval_surfaces_pop_drops():
     amat, wmat = reuse._pad_rows(addrs, writes, list(range(num_vms)), lens)
     r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                  sizing_reads_only=False, chunk=256)
-    *_, drops = ops.maintenance_interval(
+    *_, drops, _cleaned, _left = ops.maintenance_interval(
         st_, table, r.dist, r.served, amat, np.asarray(lens, np.int32),
         np.full(num_vms, w, np.int32), np.zeros(num_vms, np.int32),
         evict_frac=0.25, decay=0.5, interpret=True)
@@ -347,8 +347,8 @@ def test_fused_interval_matches_staged_host_reference(num_vms, seed):
     amat, wmat = reuse._pad_rows(addrs, writes, list(range(num_vms)), lens)
     r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                  sizing_reads_only=False, chunk=256)
-    got_ssd, got_table, flushed, promoted, eqlen, pqlen, drops = \
-        ops.maintenance_interval(
+    (got_ssd, got_table, flushed, promoted, eqlen, pqlen, drops,
+     _cleaned, _left) = ops.maintenance_interval(
             st_, table, r.dist, r.served, amat,
             np.asarray(lens, np.int32), ways, t,
             evict_frac=0.25, decay=0.5, interpret=True)

@@ -1,0 +1,249 @@
+"""Golden-file tests for the Prometheus telemetry exporter (PR 8).
+
+The metric names and label sets emitted by ``repro.runtime.metrics`` are
+a stable public contract — dashboards and alert rules key on them.
+These tests pin:
+
+* the full exposition text for a hand-built stats snapshot (byte-exact
+  golden comparison — a rename or reorder fails loudly);
+* the strict parser (``parse_exposition``) as a validator: rejects
+  samples without ``# TYPE``, duplicates, and malformed lines;
+* a seeded controller run whose ``pop_drops`` and ``bypassed`` counters
+  are nonzero, asserting the rendered text carries the *exact* counts
+  (regression: those channels used to be easy to drop silently);
+* the serving exporter against the deferred write-back conservation law.
+"""
+import types
+
+import numpy as np
+import pytest
+
+from repro.classify import seq_cutoff
+from repro.core import EticaCache, EticaConfig, Geometry, interleave
+from repro.kvcache import TwoTierConfig, TwoTierKVManager
+from repro.runtime import metrics
+from repro.traces import SessionSpec, generate_sessions, make
+
+# ---------------------------------------------------------------------------
+# renderer + parser
+# ---------------------------------------------------------------------------
+
+GOLDEN = """\
+# HELP demo_requests_total Requests served.
+# TYPE demo_requests_total counter
+demo_requests_total{vm="0",op="read"} 12
+demo_requests_total{vm="1",op="read"} 0
+# HELP demo_depth Current queue depth.
+# TYPE demo_depth gauge
+demo_depth 2.5
+"""
+
+
+def test_render_golden():
+    req = metrics.Metric("demo_requests_total", "counter",
+                         "Requests served.")
+    req.add({"vm": "0", "op": "read"}, 12.0)
+    req.add({"vm": "1", "op": "read"}, 0)
+    depth = metrics.Metric("demo_depth", "gauge", "Current queue depth.")
+    depth.add({}, 2.5)
+    assert metrics.render([req, depth]) == GOLDEN
+
+
+def test_render_escapes_labels_and_rejects_bad_names():
+    m = metrics.Metric("m_total", "counter", "h")
+    m.add({"path": 'a"b\\c\nd'}, 1)
+    text = metrics.render([m])
+    assert r'path="a\"b\\c\nd"' in text
+    fams = metrics.parse_exposition(text)
+    assert fams["m_total"]["samples"][(("path", r"a\"b\\c\nd"),)] == 1.0
+    with pytest.raises(ValueError):
+        metrics.render([metrics.Metric("bad name", "counter", "h")])
+    with pytest.raises(ValueError):
+        metrics.render([metrics.Metric("m", "histogram", "h")])
+    with pytest.raises(ValueError):
+        metrics.render([metrics.Metric("m", "counter", "h")
+                        .add({"0bad": "x"}, 1)])
+
+
+def test_parse_round_trips_golden():
+    fams = metrics.parse_exposition(GOLDEN)
+    assert fams["demo_requests_total"]["type"] == "counter"
+    assert fams["demo_requests_total"]["help"] == "Requests served."
+    assert fams["demo_requests_total"]["samples"][
+        (("op", "read"), ("vm", "0"))] == 12.0
+    assert fams["demo_depth"]["samples"][()] == 2.5
+
+
+@pytest.mark.parametrize("bad", [
+    "orphan_sample 1\n",                                   # no # TYPE
+    "# TYPE a counter\na 1\na 1\n",                        # duplicate
+    "# TYPE a counter\na{x=1} 1\n",                        # unquoted label
+    "# TYPE a counter\n# TYPE b counter\na 1\n",           # outside block
+    "# TYPE a counter\na one\n",                           # bad value
+])
+def test_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        metrics.parse_exposition(bad)
+
+
+# ---------------------------------------------------------------------------
+# cache collector: golden names on a synthetic snapshot
+# ---------------------------------------------------------------------------
+
+# The stable name contract. Extending this list is fine; renaming or
+# dropping an entry is a breaking change.
+CACHE_FAMILIES = [
+    ("etica_requests_total", "counter"),
+    ("etica_hits_total", "counter"),
+    ("etica_ssd_writes_total", "counter"),
+    ("etica_disk_reads_total", "counter"),
+    ("etica_disk_writes_total", "counter"),
+    ("etica_flushes_total", "counter"),
+    ("etica_evict_flushes_total", "counter"),
+    ("etica_dirty_resident", "gauge"),
+    ("etica_bypassed_total", "counter"),
+    ("etica_pop_drops_total", "counter"),
+    ("etica_latency_seconds_total", "counter"),
+]
+
+
+def _fake_cache():
+    return types.SimpleNamespace(
+        stats=[{"reads": 10.0, "writes": 4.0, "read_hits_l1": 6.0,
+                "read_hits_l2": 2.0, "write_hits_l2": 1.0,
+                "cache_writes_l2": 5.0, "disk_reads": 2.0,
+                "disk_writes": 7.0, "latency_sum": 0.125,
+                "bypassed": 3.0, "pop_drops": 9.0, "flushes": 4.0,
+                "evict_flushes": 2.0, "dirty_resident": 1.0}],
+        classifier=None)
+
+
+def test_cache_exposition_names_are_stable():
+    text = metrics.render_cache(_fake_cache())
+    fams = metrics.parse_exposition(text)
+    assert [(n, fams[n]["type"]) for n in fams] == CACHE_FAMILIES
+    s = fams["etica_hits_total"]["samples"]
+    assert s[(("level", "dram"), ("op", "read"), ("vm", "0"))] == 6.0
+    assert s[(("level", "ssd"), ("op", "read"), ("vm", "0"))] == 2.0
+    assert s[(("level", "ssd"), ("op", "write"), ("vm", "0"))] == 1.0
+    assert fams["etica_flushes_total"]["samples"][(("vm", "0"),)] == 4.0
+    assert fams["etica_dirty_resident"]["samples"][(("vm", "0"),)] == 1.0
+    assert fams["etica_latency_seconds_total"]["samples"][
+        (("vm", "0"),)] == 0.125
+
+
+def test_missing_keys_render_as_zero_not_absent():
+    """Fixed-shape scrapes: a stats dict without the cleaner keys (e.g.
+    ``clean_quota=0``) still emits every family, at 0."""
+    cache = types.SimpleNamespace(stats=[{"reads": 1.0}], classifier=None)
+    fams = metrics.parse_exposition(metrics.render_cache(cache))
+    assert [(n, fams[n]["type"]) for n in fams] == CACHE_FAMILIES
+    assert fams["etica_flushes_total"]["samples"][(("vm", "0"),)] == 0.0
+    assert fams["etica_pop_drops_total"]["samples"][(("vm", "0"),)] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# seeded end-to-end regressions: exact pop_drops / bypassed counts
+# ---------------------------------------------------------------------------
+
+GEO = Geometry(num_sets=8, max_ways=16)
+
+
+def test_seeded_run_exports_exact_drop_bypass_and_class_counts():
+    mix = interleave(
+        [make(n, 1200, seed=i, addr_offset=i * 10_000_000, scale=0.25)
+         for i, n in enumerate(["hm_1", "web_3"])], seed=42)
+    # splice in long sequential scans so seq_cutoff(8) actually trips
+    runs = [np.arange(50_000 + i * 500, 50_000 + i * 500 + 24,
+                      dtype=np.int32) for i in range(10)]
+    seq = np.concatenate(runs)
+    from repro.core import Trace
+    trace = Trace(addr=np.concatenate([np.asarray(mix.addr), seq]),
+                  is_write=np.concatenate([np.asarray(mix.is_write),
+                                           np.zeros(len(seq), bool)]),
+                  vm=np.concatenate([np.asarray(mix.vm),
+                                     np.full(len(seq), 0, np.int32)]))
+    cfg = EticaConfig(dram_capacity=40, ssd_capacity=80, geometry_dram=GEO,
+                      geometry_ssd=GEO, resize_interval=600,
+                      promo_interval=200, pop_capacity=8,   # tiny: overflow
+                      classifier=seq_cutoff(8), clean_quota=2)
+    cache = EticaCache(cfg, num_vms=2)
+    res = cache.run(trace)
+    text = metrics.render_cache(cache)
+    fams = metrics.parse_exposition(text)
+
+    total_drops = total_byp = 0
+    for v in range(2):
+        s = res[v].stats
+        key = (("vm", str(v)),)
+        assert fams["etica_pop_drops_total"]["samples"][key] == \
+            s["pop_drops"]
+        assert fams["etica_bypassed_total"]["samples"][key] == s["bypassed"]
+        assert fams["etica_flushes_total"]["samples"][key] == s["flushes"]
+        assert fams["etica_dirty_resident"]["samples"][key] == \
+            s["dirty_resident"]
+        total_drops += s["pop_drops"]
+        total_byp += s["bypassed"]
+        # per-class counts reconcile with the scalar stats
+        cs = fams["etica_class_requests_total"]["samples"]
+        hits = sum(cs[k] for k in cs
+                   if (("vm", str(v)) in k and ("result", "hit") in k))
+        miss = sum(cs[k] for k in cs
+                   if (("vm", str(v)) in k and ("result", "miss") in k))
+        assert hits == s["read_hits_l1"] + s["read_hits_l2"] + \
+            s["write_hits_l2"]
+        assert hits + miss == s["reads"] + s["writes"] - s["bypassed"]
+    # the regression the golden file exists for: both channels nonzero
+    assert total_drops > 0, "pop_capacity=8 produced no drops"
+    assert total_byp > 0, "seq_cutoff(8) produced no bypasses"
+    for cname in ("default", "seq_bypass"):
+        assert f'io_class="{cname}"' in text
+
+
+# ---------------------------------------------------------------------------
+# serving collector
+# ---------------------------------------------------------------------------
+
+def test_serving_exposition_and_conservation():
+    cfg = TwoTierConfig(page_size=8, hbm_pages=24, num_kv_heads=2,
+                        head_dim=4, num_layers=1, dtype="float32",
+                        maintenance_interval=16, resize_interval=64,
+                        pop_capacity=128, materialize=False, clean_quota=2)
+    mgr = TwoTierKVManager(cfg, num_tenants=3)
+    tr = generate_sessions(SessionSpec(num_tenants=3, target_live=48,
+                                       max_pages=4, lifetime=20),
+                           800, seed=0)
+    rng = np.random.default_rng(7)
+    pg = rng.normal(size=(1, cfg.page_size, cfg.num_kv_heads,
+                          cfg.head_dim)).astype(np.float32)
+    from repro.traces import (SESSION_ACTIVATE, SESSION_APPEND,
+                              SESSION_END, SESSION_NEW)
+    for i in range(len(tr)):
+        kind, sid = int(tr.kind[i]), int(tr.sid[i])
+        if kind == SESSION_NEW:
+            mgr.new_session(sid, int(tr.tenant[i]))
+        elif kind == SESSION_APPEND:
+            mgr.append_page(sid, pg, pg)
+        elif kind == SESSION_ACTIVATE:
+            mgr.activate(sid)
+        elif kind == SESSION_END:
+            mgr.end_session(sid)
+
+    fams = metrics.parse_exposition(metrics.render_serving(mgr))
+    g = lambda n: fams[f"etica_serving_{n}"]["samples"][()]
+    s = mgr.stats
+    assert g("appends_total") == s.appends
+    assert g("flushes_total") == s.flushes
+    assert g("evict_flushes_total") == s.evict_flushes
+    assert g("dirty_dropped_total") == s.dirty_dropped
+    assert g("dirty_resident") == s.dirty_resident == len(mgr._dirty)
+    assert fams["etica_serving_dirty_resident"]["type"] == "gauge"
+    # deferred write-back conservation: every append is eventually
+    # cleaned, force-flushed, still dirty, or retired with its session
+    assert g("appends_total") == (g("flushes_total")
+                                  + g("evict_flushes_total")
+                                  + g("dirty_resident")
+                                  + g("dirty_dropped_total"))
+    assert g("dma_write_bytes_total") == (
+        (s.flushes + s.evict_flushes) * mgr.cfg.page_bytes)
+    assert g("flushes_total") > 0, "cleaner never ran in seeded trace"

@@ -1,6 +1,8 @@
 """Batched serving controller vs the host-dict oracle, churn generator
 validity, bounded controller memory, and the repartition edge-case fixes.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -211,3 +213,60 @@ class TestLRUBaselineOnChurn:
         assert (etica.stats.dma_write_bytes
                 == etica.stats.appends * CFG.page_bytes)
         assert lru.stats.dma_write_bytes > etica.stats.dma_write_bytes
+
+
+class TestServingCleaner:
+    """PR 8 cleaning variants: deferred write-back with the background
+    cleaner enabled (``clean_quota > 0``) keeps batched == oracle bit
+    identity, tightens the WBWO write bound, and never changes what the
+    cache serves."""
+
+    @pytest.mark.parametrize("seed,quota", [(0, 1), (1, 2), (2, 4)])
+    def test_bit_identical_with_cleaner(self, seed, quota):
+        cfg = dataclasses.replace(CFG, clean_quota=quota)
+        spec = SessionSpec(num_tenants=3, target_live=48, max_pages=4,
+                           lifetime=20)
+        tr = generate_sessions(spec, 1500, seed=seed)
+        a = _replay(TwoTierKVManager(cfg, 3, batched=True), tr)
+        b = _replay(TwoTierKVManager(cfg, 3, batched=False), tr)
+        assert _snapshot(a) == _snapshot(b)
+        assert a._dirty == b._dirty
+        assert a.stats.flushes > 0, "cleaner never flushed on this trace"
+
+    def test_wbwo_bound_and_flush_conservation(self):
+        """One write per append holds *exactly*: every appended page is
+        flushed by the cleaner, force-flushed on eviction, retired with
+        its session, or still dirty-resident — each exactly once — and
+        only the flushed ones paid DMA."""
+        cfg = dataclasses.replace(CFG, clean_quota=2)
+        spec = SessionSpec(num_tenants=3, target_live=48, max_pages=4,
+                           lifetime=20)
+        tr = generate_sessions(spec, 1500, seed=3)
+        for batched in (True, False):
+            s = _replay(TwoTierKVManager(cfg, 3, batched=batched), tr).stats
+            assert s.appends == (s.flushes + s.evict_flushes
+                                 + s.dirty_resident + s.dirty_dropped)
+            assert s.dma_write_bytes == \
+                (s.flushes + s.evict_flushes) * cfg.page_bytes
+            # deferral never writes MORE than eager WBWO, and dropping
+            # dead sessions' pages makes it strictly cheaper under churn
+            assert s.dma_write_bytes < s.appends * cfg.page_bytes
+
+    def test_cleaning_does_not_change_hit_miss_stats(self):
+        """Cleaning only moves write-back traffic: read-side stats are
+        bit-identical to the eager-commit (clean_quota=0) run, and dirty
+        pages only ever live in HBM-resident slots."""
+        spec = SessionSpec(num_tenants=3, target_live=48, max_pages=4,
+                           lifetime=20)
+        tr = generate_sessions(spec, 1500, seed=4)
+        base = _replay(TwoTierKVManager(CFG, 3, batched=True), tr)
+        mgr = _replay(TwoTierKVManager(
+            dataclasses.replace(CFG, clean_quota=2), 3, batched=True), tr)
+        for f in ("activations", "hits", "appends", "dma_read_bytes",
+                  "sessions_ended", "pop_drops"):
+            assert getattr(mgr.stats, f) == getattr(base.stats, f), f
+        assert dict(mgr.slot_owner) == dict(base.slot_owner)
+        # dirty subset-of-resident invariant
+        resident = set(mgr.slot_owner.values())
+        for key in mgr._dirty:
+            assert key in resident, key

@@ -9,7 +9,8 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Trace, make_cache, simulate_two_level
-from repro.core.simulator import resident_blocks
+from repro.core.simulator import (clean_blocks, clean_blocks_ref,
+                                  resident_blocks)
 
 SETTINGS = dict(max_examples=15, deadline=None)
 SETS_D, WAYS_D = 4, 4
@@ -83,6 +84,52 @@ def test_write_invalidate_worked_example():
         if mode == "npe":   # write-allocated into the SSD, dirty there
             assert 7 in resident_blocks(ssd, WAYS_S).tolist()
             assert bool(np.asarray(ssd.dirty).any())
+
+
+# ---------------------------------------------------------------------------
+# background cleaning variants (PR 8): flushing dirty bits between
+# windows must preserve every content invariant and the hit/miss stats
+# ---------------------------------------------------------------------------
+
+@given(traces(), st.integers(0, 6))
+@settings(**SETTINGS)
+def test_cleaning_preserves_content_invariants(tr, quota):
+    """Cleaning the SSD level after a window: residency is untouched
+    (flushed blocks stay cached), dirty bits only ever clear, the RO-DRAM
+    and dirty-implies-valid invariants survive, and the vectorized op
+    agrees with the sequential oracle."""
+    dram, ssd, _, _ = run(tr, "npe")
+    before_res = set(resident_blocks(ssd, WAYS_S).tolist())
+    before_dirty = np.asarray(ssd.dirty).copy()
+    cleaned, n_fl, left = clean_blocks(ssd, WAYS_S, quota)
+    assert set(resident_blocks(cleaned, WAYS_S).tolist()) == before_res
+    after = np.asarray(cleaned.dirty)
+    assert not (after & ~before_dirty).any()
+    assert int(n_fl) == min(quota, int(before_dirty.sum()))
+    assert int(left) == int(before_dirty.sum()) - int(n_fl)
+    assert not (after & (np.asarray(cleaned.tags) < 0)).any()
+    assert not bool(np.asarray(dram.dirty).any())
+    want, want_fl, want_left = clean_blocks_ref(ssd, WAYS_S, quota)
+    np.testing.assert_array_equal(after, np.asarray(want.dirty))
+    assert (int(n_fl), int(left)) == (want_fl, want_left)
+
+
+@given(traces(max_size=100), traces(max_size=100), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_cleaning_does_not_change_hit_miss_stats(tr1, tr2, quota):
+    """Running a second window from the cleaned state vs the dirty state:
+    every hit/miss channel is bit-identical — the cleaner only moves
+    write-back traffic, it never changes what the cache serves."""
+    dram, ssd, _, _ = run(tr1, "npe")
+    cleaned, _, _ = clean_blocks(ssd, WAYS_S, quota)
+    a2, w2 = np.asarray(tr2.addr), np.asarray(tr2.is_write)
+    _, _, s_dirty, _ = simulate_two_level(a2, w2, dram, ssd,
+                                          WAYS_D, WAYS_S, mode="npe")
+    _, _, s_clean, _ = simulate_two_level(a2, w2, dram, cleaned,
+                                          WAYS_D, WAYS_S, mode="npe")
+    for f in ("reads", "writes", "read_hits_l1", "read_hits_l2",
+              "write_hits_l2", "disk_reads", "bypassed"):
+        assert int(getattr(s_dirty, f)) == int(getattr(s_clean, f)), f
 
 
 @given(traces(max_size=80))

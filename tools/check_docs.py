@@ -25,7 +25,11 @@ Checks, over README.md and docs/*.md:
   6. the serving-workload docs stay wired up: docs/architecture.md
      links the serving modules (``kvcache/manager.py``,
      ``launch/serve.py``, ``traces/generators.py``) and the README
-     module map names ``kvcache/``, for modules that actually exist.
+     module map names ``kvcache/``, for modules that actually exist;
+  7. the cleaning/telemetry docs stay wired up: docs/architecture.md
+     has a "Background cleaning & telemetry" section that links
+     ``runtime/metrics.py``, the README module map names
+     ``runtime/metrics.py``, and the module actually exists on disk.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -165,6 +169,28 @@ def check_serving_docs() -> list[str]:
     return problems
 
 
+def check_cleaning_docs() -> list[str]:
+    problems = []
+    if not (ROOT / "src/repro/runtime/metrics.py").exists():
+        problems.append("src/repro/runtime/metrics.py missing "
+                        "(docs describe the telemetry exporter)")
+    readme = (ROOT / "README.md").read_text()
+    if "runtime/metrics.py" not in readme:
+        problems.append("README.md: module map does not name "
+                        "runtime/metrics.py")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        text = arch.read_text()
+        if "Background cleaning & telemetry" not in text:
+            problems.append("docs/architecture.md: no 'Background cleaning "
+                            "& telemetry' section")
+        targets = set(LINK_RE.findall(text))
+        if not any(t.endswith("runtime/metrics.py") for t in targets):
+            problems.append("docs/architecture.md: telemetry module "
+                            "runtime/metrics.py is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -178,6 +204,7 @@ def main() -> int:
     problems.extend(check_maintenance_docs())
     problems.extend(check_classification_docs())
     problems.extend(check_serving_docs())
+    problems.extend(check_cleaning_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
