@@ -221,6 +221,12 @@ class EticaConfig:
     clean_quota: int = 0             # background cleaner: max dirty-block
     #                                  flushes per VM per maintenance
     #                                  interval (0 disables the stage)
+    telemetry: object | None = None  # repro.runtime.telemetry
+    #                                  .TelemetryRecorder; None gets a
+    #                                  default bounded recorder (same
+    #                                  results either way — the recorder
+    #                                  only reads already-fetched host
+    #                                  values)
 
 
 class EticaCache:
@@ -258,11 +264,21 @@ class EticaCache:
         self.stats = [dict() for _ in range(num_vms)]
         self.logs_dram: list[IntervalLog] = []
         self.logs_ssd: list[IntervalLog] = []
-        # background-cleaner telemetry: one [V] vector per maintenance
-        # interval (batched paths) — flush counts and dirty occupancy
-        # after cleaning, for the endurance trajectory plots
-        self.clean_log: list[np.ndarray] = []
-        self.dirty_log: list[np.ndarray] = []
+        # interval telemetry: one bounded journal row per promo-interval
+        # chunk, fed exclusively from host values the interval already
+        # fetched (zero extra device→host syncs). The maintenance temps
+        # below carry this interval's promote/evict/clean counts from
+        # the maintenance step to the sampler.
+        if cfg.telemetry is not None:
+            self.telemetry = cfg.telemetry
+        else:
+            from repro.runtime.telemetry import TelemetryRecorder
+            self.telemetry = TelemetryRecorder()
+        self._m_promoted = np.zeros(num_vms, np.int64)
+        self._m_evicted = np.zeros(num_vms, np.int64)
+        self._m_cleaned = np.zeros(num_vms, np.int64)
+        self._m_dirty = np.zeros(num_vms, np.int64)
+        self._m_clean_ran = False
         # IO classification (repro.classify): per-VM sequential-run carry
         # plus the per-class tables the classified simulators consume
         self.classifier = cfg.classifier
@@ -281,6 +297,41 @@ class EticaCache:
 
     def vm_ssd(self, v: int) -> CacheState:
         return _vm_slice(self.ssd, v) if self.cfg.batched else self.ssd[v]
+
+    # -- telemetry ----------------------------------------------------------
+    # Pre-PR-9 cleaner telemetry (`clean_log`/`dirty_log`) was a pair of
+    # unbounded Python lists growing one [V] vector per maintenance
+    # interval forever. They are now bounded-journal views: the rows
+    # where the batched cleaner actually ran — same entries the lists
+    # held (the sequential oracle never recorded them, and still
+    # doesn't), capped at the journal window.
+    @property
+    def clean_log(self) -> list[np.ndarray]:
+        return self.telemetry.cache_clean_log()
+
+    @property
+    def dirty_log(self) -> list[np.ndarray]:
+        return self.telemetry.cache_dirty_log()
+
+    def _sample_interval(self) -> None:
+        """Append one journal row for the chunk just simulated — per-VM
+        deltas from the cumulative stats plus the maintenance counts the
+        interval's existing device_get already brought to host."""
+        gd, gs = self.cfg.geometry_dram, self.cfg.geometry_ssd
+        cls = self.classifier is not None
+        self.telemetry.sample_cache(
+            self.stats,
+            alloc_l1=self.ways_dram.astype(np.int64) * gd.num_sets,
+            alloc_l2=self.ways_ssd.astype(np.int64) * gs.num_sets,
+            promoted=self._m_promoted, evict_queue=self._m_evicted,
+            cleaned=self._m_cleaned, dirty=self._m_dirty,
+            clean_ran=self._m_clean_ran,
+            cls_hits=self.cls_hits if cls else None,
+            cls_miss=self.cls_miss if cls else None)
+        self._m_promoted = np.zeros(self.num_vms, np.int64)
+        self._m_evicted = np.zeros(self.num_vms, np.int64)
+        self._m_cleaned = np.zeros(self.num_vms, np.int64)
+        self._m_clean_ran = False          # _m_dirty is a gauge: carries
 
     # -- sizing -----------------------------------------------------------
     def _size_level(self, subs: list[Trace], policy: Policy, geom: Geometry,
@@ -307,7 +358,9 @@ class EticaCache:
                 wts.append(w_req)
         if self.cfg.batched:
             # all VMs' POD decompositions in one vmapped dispatch
-            dists = reuse.pod_distances_batch(addrs, writes, policy)
+            with self.telemetry.span("sizing") as sp:
+                dists = reuse.pod_distances_batch(addrs, writes, policy)
+                sp.ready(dists)
         else:
             dists = [reuse.pod_distances(a, w, policy) if a.size else None
                      for a, w in zip(addrs, writes)]
@@ -362,6 +415,7 @@ class EticaCache:
         if ssd_res.size and ssd_res.size * 10 >= alloc_blocks * 9:
             evict = self.trackers[v].least_popular(ssd_res, cfg.evict_frac)
             if evict.size:
+                self._m_evicted[v] += int(evict.size)
                 self.ssd[v], flushed = simulator.evict_blocks_ref(
                     self.ssd[v], evict)
                 self.stats[v]["disk_writes"] = (
@@ -380,6 +434,7 @@ class EticaCache:
                 self.ssd[v], n = simulator.promote_blocks_ref(
                     self.ssd[v], promote, int(self.ways_ssd[v]),
                     int(self.t[v]))
+                self._m_promoted[v] += int(n)
                 # each promotion = 1 disk read + 1 SSD write (endurance cost)
                 self.stats[v]["cache_writes_l2"] = (
                     self.stats[v].get("cache_writes_l2", 0.0) + n)
@@ -395,6 +450,8 @@ class EticaCache:
             self.stats[v]["disk_writes"] = (
                 self.stats[v].get("disk_writes", 0.0) + n_fl)
             self.stats[v]["dirty_resident"] = float(left)
+            self._m_cleaned[v] += int(n_fl)
+            self._m_dirty[v] = int(left)
 
     def _residents(self, tags_np: np.ndarray, v: int) -> np.ndarray:
         t = tags_np[v, :, : max(int(self.ways_ssd[v]), 0)]
@@ -440,12 +497,14 @@ class EticaCache:
                                      lens)
         r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
                                      sizing_reads_only=False, chunk=256)
-        (self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen, pdrops,
-         cleaned, dirty_left) = maint_ops.maintenance_interval(
-                self.ssd, self.pop_table, r.dist, r.served, amat,
-                np.asarray(lens, np.int32), self.ways_ssd, self.t,
-                evict_frac=cfg.evict_frac, decay=cfg.popularity_decay,
-                clean_quota=cfg.clean_quota)
+        with self.telemetry.span("maintenance") as sp:
+            (self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen,
+             pdrops, cleaned, dirty_left) = maint_ops.maintenance_interval(
+                    self.ssd, self.pop_table, r.dist, r.served, amat,
+                    np.asarray(lens, np.int32), self.ways_ssd, self.t,
+                    evict_frac=cfg.evict_frac, decay=cfg.popularity_decay,
+                    clean_quota=cfg.clean_quota)
+            sp.ready((self.ssd, self.pop_table, flushed))
         # ONE host transfer for all per-VM counters — the cleaner's two
         # vectors ride the sync the interval already paid for
         flushed, promoted, eqlen, pqlen, pdrops, cleaned, dirty_left = \
@@ -477,9 +536,15 @@ class EticaCache:
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + int(cleaned[v]))
                 self.stats[v]["dirty_resident"] = float(dirty_left[v])
+        # same masking as the stats credits above: the kernel outputs are
+        # only meaningful where the corresponding queue was non-empty
+        self._m_promoted += np.where(np.asarray(pqlen) > 0,
+                                     np.asarray(promoted, np.int64), 0)
+        self._m_evicted += np.asarray(eqlen, np.int64)
         if cfg.clean_quota > 0:
-            self.clean_log.append(cleaned.copy())
-            self.dirty_log.append(dirty_left.copy())
+            self._m_cleaned += np.asarray(cleaned, np.int64)
+            self._m_dirty = np.asarray(dirty_left, np.int64)
+            self._m_clean_ran = True
 
     def _maintain_staged(self, chunks: list[Trace | None]) -> None:
         """Staged batched maintenance (host trackers + separate vmapped
@@ -519,6 +584,8 @@ class EticaCache:
                 evict_qs[v] = self.trackers[v].least_popular(
                     res, cfg.evict_frac)
         if any(q.size for q in evict_qs):
+            self._m_evicted += np.asarray([q.size for q in evict_qs],
+                                          np.int64)
             self.ssd, flushed = simulator.evict_blocks_batch(
                 self.ssd, evict_qs)
             flushed = np.asarray(flushed)
@@ -544,6 +611,7 @@ class EticaCache:
             n = np.asarray(n)
             for v in live:
                 if promo_qs[v].size:
+                    self._m_promoted[v] += int(n[v])
                     self.stats[v]["cache_writes_l2"] = (
                         self.stats[v].get("cache_writes_l2", 0.0)
                         + int(n[v]))
@@ -564,8 +632,9 @@ class EticaCache:
                 self.stats[v]["disk_writes"] = (
                     self.stats[v].get("disk_writes", 0.0) + int(cleaned[v]))
                 self.stats[v]["dirty_resident"] = float(dirty_left[v])
-            self.clean_log.append(np.asarray(cleaned).copy())
-            self.dirty_log.append(np.asarray(dirty_left).copy())
+            self._m_cleaned += np.asarray(cleaned, np.int64)
+            self._m_dirty = np.asarray(dirty_left, np.int64)
+            self._m_clean_ran = True
 
     # -- datapath ----------------------------------------------------------
     def _run_chunk_batched(self, a, w, chunks: list[Trace | None],
@@ -578,20 +647,22 @@ class EticaCache:
         attribution. ``cmat`` is the matching ``[V, chunk]`` class-id
         block when a classifier is configured."""
         cfg = self.cfg
-        if cmat is None:
-            self.dram, self.ssd, st, t_end = \
-                simulator.simulate_two_level_batch(
-                    a, w, self.dram, self.ssd, self.ways_dram, self.ways_ssd,
-                    mode=cfg.mode, t0=self.t)
-        else:
-            self.dram, self.ssd, st, t_end, ch, cm = \
-                simulator.simulate_two_level_classified_batch(
-                    a, w, cmat, self.dram, self.ssd, self.ways_dram,
-                    self.ways_ssd, self._byp, self._lo_d, self._hi_d,
-                    self._lo_s, self._hi_s, mode=cfg.mode, t0=self.t)
-            ch, cm = jax.device_get((ch, cm))
-            self.cls_hits += np.asarray(ch, np.int64)
-            self.cls_miss += np.asarray(cm, np.int64)
+        with self.telemetry.span("datapath") as sp:
+            if cmat is None:
+                self.dram, self.ssd, st, t_end = \
+                    simulator.simulate_two_level_batch(
+                        a, w, self.dram, self.ssd, self.ways_dram,
+                        self.ways_ssd, mode=cfg.mode, t0=self.t)
+            else:
+                self.dram, self.ssd, st, t_end, ch, cm = \
+                    simulator.simulate_two_level_classified_batch(
+                        a, w, cmat, self.dram, self.ssd, self.ways_dram,
+                        self.ways_ssd, self._byp, self._lo_d, self._hi_d,
+                        self._lo_s, self._hi_s, mode=cfg.mode, t0=self.t)
+                ch, cm = jax.device_get((ch, cm))
+                self.cls_hits += np.asarray(ch, np.int64)
+                self.cls_miss += np.asarray(cm, np.int64)
+            sp.ready(st)
         self.t = np.asarray(t_end)
         st = jax.device_get(st)
         for v, chunk in enumerate(chunks):
@@ -711,6 +782,7 @@ class EticaCache:
                         mth = (kth if cls_subs is None else _strip_bypass(
                             kth, cls_subs, k, cfg.promo_interval, self._byp))
                         self._maintain_all(mth)
+                    self._sample_interval()
             else:
                 chunk_lists = win.chunk_lists()
                 for k in range(max(map(len, chunk_lists), default=0)):
@@ -722,6 +794,7 @@ class EticaCache:
                         for v, chunk in enumerate(mth):
                             if chunk is not None:
                                 self._maintain_seq(v, chunk)
+                    self._sample_interval()
         return [VMResult(dict(self.stats[v]),
                          np.asarray(alloc_hist[v], np.int64))
                 for v in range(self.num_vms)]
@@ -741,6 +814,8 @@ class SingleLevelConfig:
     batched: bool = True             # one vmapped dispatch for all VMs
     prefetch: bool = True            # double-buffer host->device blocks
     classifier: object | None = None  # repro.classify.Classifier | None
+    telemetry: object | None = None  # TelemetryRecorder | None (default
+    #                                  bounded recorder when None)
 
 
 MetricFn = Callable[[Trace], tuple[int, np.ndarray, np.ndarray]]
@@ -815,6 +890,11 @@ class PartitionedSingleLevelCache:
         self.t = np.zeros(num_vms, np.int32)
         self.stats = [dict() for _ in range(num_vms)]
         self.logs: list[IntervalLog] = []
+        if cfg.telemetry is not None:
+            self.telemetry = cfg.telemetry
+        else:
+            from repro.runtime.telemetry import TelemetryRecorder
+            self.telemetry = TelemetryRecorder()
         self.classifier = cfg.classifier
         if self.classifier is not None:
             self._cls_end, self._cls_len = self.classifier.init_carry(num_vms)
@@ -825,6 +905,17 @@ class PartitionedSingleLevelCache:
 
     def vm_cache(self, v: int) -> CacheState:
         return _vm_slice(self.caches, v) if self.cfg.batched else self.caches[v]
+
+    def _sample_interval(self) -> None:
+        """One journal row per sim chunk — same host-side delta sampling
+        as :meth:`EticaCache._sample_interval`, minus the two-level
+        maintenance channels this chassis doesn't have."""
+        cls = self.classifier is not None
+        self.telemetry.sample_cache(
+            self.stats,
+            alloc_l2=self.ways.astype(np.int64) * self.cfg.geometry.num_sets,
+            cls_hits=self.cls_hits if cls else None,
+            cls_miss=self.cls_miss if cls else None)
 
     def run(self, trace) -> list[VMResult]:
         """Drive the chassis over a :class:`Trace`, an on-disk
@@ -859,10 +950,12 @@ class PartitionedSingleLevelCache:
                 # stacked reuse-distance histograms (empty rows stay 0);
                 # the dynamic policy choosers' read counts ride the same
                 # dispatch
-                dem, g_, cur, reads = self.metric.batch(
-                    [np.asarray(s.addr) for s in subs_sz],
-                    [np.asarray(s.is_write) for s in subs_sz],
-                    with_reads=True)
+                with self.telemetry.span("sizing") as sp:
+                    dem, g_, cur, reads = self.metric.batch(
+                        [np.asarray(s.addr) for s in subs_sz],
+                        [np.asarray(s.is_write) for s in subs_sz],
+                        with_reads=True)
+                    sp.ready((dem, cur))
                 same_grid = np.array_equal(g_, grid)
                 for v, sub in enumerate(subs_sz):
                     if len(sub) == 0:
@@ -928,25 +1021,28 @@ class PartitionedSingleLevelCache:
                 # [V, chunk] blocks from the source (device-put one block
                 # ahead of the simulator when prefetch is on)
                 for k, (a, wr, kth) in enumerate(win.blocks()):
-                    if cls_subs is None:
-                        self.caches, st, t_end = \
-                            simulator.simulate_single_level_batch(
-                                a, wr, self.caches, self.ways, flags,
-                                t0=self.t)
-                    else:
-                        cmat = _cls_chunk(cls_subs, k, cfg.sim_chunk)
-                        self.caches, st, t_end, ch, cm = \
-                            simulator.simulate_single_level_classified_batch(
-                                a, wr, cmat, self.caches, self.ways,
-                                flags_vc, lo, hi, self._byp, t0=self.t)
-                        ch, cm = jax.device_get((ch, cm))
-                        self.cls_hits += np.asarray(ch, np.int64)
-                        self.cls_miss += np.asarray(cm, np.int64)
+                    with self.telemetry.span("datapath") as sp:
+                        if cls_subs is None:
+                            self.caches, st, t_end = \
+                                simulator.simulate_single_level_batch(
+                                    a, wr, self.caches, self.ways, flags,
+                                    t0=self.t)
+                        else:
+                            cmat = _cls_chunk(cls_subs, k, cfg.sim_chunk)
+                            self.caches, st, t_end, ch, cm = simulator.\
+                                simulate_single_level_classified_batch(
+                                    a, wr, cmat, self.caches, self.ways,
+                                    flags_vc, lo, hi, self._byp, t0=self.t)
+                            ch, cm = jax.device_get((ch, cm))
+                            self.cls_hits += np.asarray(ch, np.int64)
+                            self.cls_miss += np.asarray(cm, np.int64)
+                        sp.ready(st)
                     self.t = np.asarray(t_end)
                     st = jax.device_get(st)
                     for v, chunk in enumerate(kth):
                         if chunk is not None:
                             _acc(self.stats[v], Stats(*[f[v] for f in st]))
+                    self._sample_interval()
             else:
                 chunk_lists = win.chunk_lists()
                 for k in range(max(map(len, chunk_lists), default=0)):
@@ -978,6 +1074,7 @@ class PartitionedSingleLevelCache:
                             self.cls_miss[v] += np.asarray(cm, np.int64)
                         self.t[v] = int(t_end)
                         _acc(self.stats[v], st)
+                    self._sample_interval()
         return [VMResult(dict(self.stats[v]),
                          np.asarray(alloc_hist[v], np.int64))
                 for v in range(self.num_vms)]

@@ -83,6 +83,9 @@ class TwoTierConfig:
     clean_quota: int = 0          # deferred write-back: max dirty-page
                                   # flushes per tenant per maintenance
                                   # interval (0 = eager commit on append)
+    telemetry: object | None = None  # repro.runtime.telemetry
+                                  # .TelemetryRecorder; None gets a default
+                                  # bounded recorder (Stats identical)
 
     @property
     def page_bytes(self) -> int:
@@ -262,6 +265,13 @@ class TwoTierKVManager:
                                     cfg.hbm_pages // max(num_tenants, 1))
         self.tenant_used = np.zeros(num_tenants, np.int64)
         self.stats = Stats()
+        # per-maintenance-tick telemetry journal (bounded; deltas come
+        # from the host Stats the controller already maintains)
+        if cfg.telemetry is not None:
+            self.telemetry = cfg.telemetry
+        else:
+            from repro.runtime.telemetry import TelemetryRecorder
+            self.telemetry = TelemetryRecorder()
         self._since_maint = 0
         self._since_resize = 0
         # deferred write-back (cfg.clean_quota > 0): uncommitted appended
@@ -454,8 +464,10 @@ class TwoTierKVManager:
 
     def _maintenance_tick(self, active_sid: int | None = None):
         cfg = self.cfg
+        ran = False
         if self._since_maint >= cfg.maintenance_interval:
             self._since_maint = 0
+            ran = True
             if self.batched:
                 self._maintain_batched(exclude_sid=active_sid)
             else:
@@ -465,6 +477,12 @@ class TwoTierKVManager:
         if self._since_resize >= cfg.resize_interval:
             self._since_resize = 0
             self._repartition()
+        if ran:
+            # one journal row per maintenance interval, from the host
+            # Stats/quota state already in hand (zero added syncs)
+            self.telemetry.sample_serving(self.stats,
+                                          quota=self.tenant_quota,
+                                          used=self.tenant_used)
 
     def _window(self):
         sid, tenant, wr = self._ring.arrays()
@@ -570,12 +588,14 @@ class TwoTierKVManager:
                 cand_pages[t, i] = n
         over = self.tenant_used - self.tenant_quota
         ditems, dirty_age = self._dirty_by_tenant()
-        self._table, drops, eorder, take, fpick = serving_maintenance(
-            self._table, r.dist, r.served, addr, tenant,
-            cand_sid, cand_pages, over,
-            max(int(self.tenant_quota.sum()), 1),
-            decay=self.cfg.popularity_decay,
-            dirty_age=dirty_age, clean_quota=self.cfg.clean_quota)
+        with self.telemetry.span("serving_maintenance") as sp:
+            self._table, drops, eorder, take, fpick = serving_maintenance(
+                self._table, r.dist, r.served, addr, tenant,
+                cand_sid, cand_pages, over,
+                max(int(self.tenant_quota.sum()), 1),
+                decay=self.cfg.popularity_decay,
+                dirty_age=dirty_age, clean_quota=self.cfg.clean_quota)
+            sp.ready((self._table, eorder, take, fpick))
         # one host sync per interval: queues + cleaner picks + table mirror
         eorder = np.asarray(eorder)
         take = np.asarray(take)
@@ -626,7 +646,9 @@ class TwoTierKVManager:
         demands = np.zeros(self.num_tenants, np.int64)
         curves = np.zeros((self.num_tenants, grid.size))
         if self.batched:
-            rs = core_reuse.pod_distances_batch(sids, writes, Policy.RO)
+            with self.telemetry.span("serving_sizing") as sp:
+                rs = core_reuse.pod_distances_batch(sids, writes, Policy.RO)
+                sp.ready(rs)
         else:
             rs = [core_reuse.pod_distances(s, w, Policy.RO)
                   if s.size else None for s, w in zip(sids, writes)]

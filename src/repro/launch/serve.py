@@ -17,6 +17,14 @@ SSD-write / latency metrics.
 Managers: ``etica`` (batched controller), ``etica-seq`` (the host-dict
 sequential oracle — same decisions, slower), ``lru`` (global LRU +
 write-back baseline).
+
+Observability: ``--metrics-port N`` starts the stdlib scrape endpoint
+(`repro.runtime.http.MetricsServer`; 0 picks an ephemeral port, printed
+at startup) serving live ``/metrics`` from the manager's counters and
+telemetry journal; ``--journal PATH`` spills one JSONL row per
+maintenance interval (read it back with ``tools/run_report.py``);
+``--spans`` enables the dispatch wall-clock histograms (adds
+``block_until_ready`` syncs — off by default).
 """
 from __future__ import annotations
 
@@ -119,20 +127,52 @@ def main(argv=None):
     ap.add_argument("--no-materialize", action="store_true",
                     help="skip device page pools (implies no decode) — "
                          "controller-scale runs")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live /metrics + /healthz on this port "
+                         "(0 = ephemeral; off when omitted)")
+    ap.add_argument("--journal", default=None,
+                    help="spill the per-interval telemetry journal to "
+                         "this JSONL path")
+    ap.add_argument("--spans", action="store_true",
+                    help="time the fused dispatches into the "
+                         "etica_dispatch_seconds histogram (adds "
+                         "block_until_ready syncs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch)
+    recorder = None
+    if args.metrics_port is not None or args.journal or args.spans:
+        from repro.runtime.telemetry import TelemetryRecorder
+        recorder = TelemetryRecorder(spill=args.journal,
+                                     span_timing=args.spans)
     kv_cfg = TwoTierConfig(
         page_size=args.page_size, hbm_pages=args.hbm_pages,
         num_kv_heads=max(cfg.num_kv_heads, 1),
         head_dim=max(cfg.head_dim, 8), num_layers=1, dtype="float32",
-        materialize=not args.no_materialize)
+        materialize=not args.no_materialize, telemetry=recorder)
     if args.manager == "lru":
         mgr = GlobalLRUManager(kv_cfg, args.tenants)
     else:
         mgr = TwoTierKVManager(kv_cfg, args.tenants,
                                batched=args.manager == "etica")
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.runtime import metrics as metrics_mod
+        from repro.runtime.http import MetricsServer
+
+        def _collect():
+            out = []
+            if isinstance(mgr, TwoTierKVManager):
+                out += metrics_mod.collect_serving(mgr)
+                out += metrics_mod.collect_telemetry(
+                    mgr.telemetry, prefix="etica_serving", label="tenant")
+            return out
+
+        server = MetricsServer(_collect, port=args.metrics_port)
+        host, port = server.start()
+        print(f"metrics: http://{host}:{port}/metrics")
 
     spec = SessionSpec(num_tenants=args.tenants, target_live=args.live,
                        max_pages=args.max_pages)
@@ -151,6 +191,24 @@ def main(argv=None):
     for k, v in s.items():
         print(f"  {k:18s} {v:,.3f}" if isinstance(v, float) else
               f"  {k:18s} {v:,}")
+    if recorder is not None and recorder.journal.total:
+        last = recorder.journal.last_row()
+        flagged = [str(t) for t, f in enumerate(last["overloaded"]) if f]
+        print(f"  telemetry: {recorder.journal.total} interval rows"
+              + (f", journal -> {args.journal}" if args.journal else "")
+              + (f", overloaded tenants: {','.join(flagged)}"
+                 if flagged else ""))
+    if server is not None:
+        # interactive runs keep the endpoint alive for a final scrape;
+        # programmatic callers (argv passed in) get it shut down cleanly
+        if argv is None:
+            print(f"scrape still live at {server.url} (ctrl-c to exit)")
+            try:
+                import signal
+                signal.pause()
+            except (KeyboardInterrupt, AttributeError):
+                pass
+        server.stop()
     return s
 
 

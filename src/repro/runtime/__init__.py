@@ -1,0 +1,8 @@
+"""Runtime subsystems: fault handling (`fault`), interval telemetry
+journals + dispatch spans + overload detection (`telemetry`), Prometheus
+text export (`metrics`), and the stdlib live scrape endpoint (`http`).
+
+Submodules are imported explicitly (``from repro.runtime import
+metrics``) — nothing is re-exported here, so importing the package stays
+free of jax/numpy side effects.
+"""

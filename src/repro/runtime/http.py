@@ -1,0 +1,126 @@
+"""Dependency-free live scrape endpoint for the telemetry registry.
+
+A tiny stdlib ``http.server`` wrapper exposing two routes from a
+background daemon thread:
+
+* ``GET /metrics``  — the Prometheus text exposition rendered *live* at
+  scrape time from a ``collect`` callable (returning either a list of
+  :class:`repro.runtime.metrics.Metric` families or pre-rendered text).
+* ``GET /healthz``  — ``ok`` liveness probe.
+
+No third-party HTTP stack exists in the image and none is needed: the
+exposition format is plain text and ``ThreadingHTTPServer`` handles
+concurrent scrapes. The collector runs on the scrape thread while the
+simulation appends journal rows on the main thread; column reads are
+snapshot copies, so the worst case is a scrape observing interval N-1
+while N lands — acceptable for monitoring, noted here for honesty.
+
+Wired into ``launch/serve.py`` via ``--metrics-port`` (0 picks an
+ephemeral port, printed at startup).
+"""
+from __future__ import annotations
+
+import http.server
+import threading
+
+from repro.runtime import metrics as metrics_mod
+
+__all__ = ["MetricsServer"]
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class _Handler(http.server.BaseHTTPRequestHandler):
+    # the server instance injects `collect` via the class-per-server
+    # subclass created in MetricsServer.start()
+    collect = None
+
+    def _send(self, status: int, body: str,
+              ctype: str = CONTENT_TYPE) -> None:
+        data = body.encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self):  # noqa: N802 (stdlib handler naming)
+        path = self.path.split("?", 1)[0]
+        if path == "/metrics":
+            try:
+                out = type(self).collect()
+                body = out if isinstance(out, str) else \
+                    metrics_mod.render(out)
+            except Exception as e:  # surface collector bugs to the scraper
+                self._send(500, f"collector error: {e}\n",
+                           "text/plain; charset=utf-8")
+                return
+            self._send(200, body)
+        elif path == "/healthz":
+            self._send(200, "ok\n", "text/plain; charset=utf-8")
+        else:
+            self._send(404, "not found\n", "text/plain; charset=utf-8")
+
+    def log_message(self, fmt, *args):  # silence per-request stderr spam
+        pass
+
+
+class MetricsServer:
+    """Background-thread scrape server over a live collector.
+
+    ``collect`` is called per scrape — pass a closure over the live
+    controller/recorder (e.g. ``lambda: collect_serving(mgr) +
+    collect_telemetry(rec)``) so every scrape sees current counters.
+
+    Usable as a context manager; ``start()`` returns ``(host, port)``
+    with the ephemeral port resolved.
+    """
+
+    def __init__(self, collect, host: str = "127.0.0.1", port: int = 0):
+        self._collect = collect
+        self._host = host
+        self._port = port
+        self._server = None
+        self._thread = None
+
+    def start(self) -> tuple[str, int]:
+        if self._server is not None:
+            raise RuntimeError("server already started")
+        handler = type("_BoundHandler", (_Handler,),
+                       {"collect": staticmethod(self._collect)})
+        self._server = http.server.ThreadingHTTPServer(
+            (self._host, self._port), handler)
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="etica-metrics",
+            daemon=True)
+        self._thread.start()
+        return self.address
+
+    @property
+    def address(self) -> tuple[str, int]:
+        if self._server is None:
+            raise RuntimeError("server not started")
+        host, port = self._server.server_address[:2]
+        return host, port
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}/metrics"
+
+    def stop(self) -> None:
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._thread.join(timeout=5)
+            self._server = None
+            self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False

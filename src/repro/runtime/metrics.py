@@ -6,7 +6,10 @@ One module, three layers:
   the Prometheus text exposition format v0.0.4 (``# HELP`` / ``# TYPE``
   headers, ``name{label="v"} value`` samples, stable ordering, label
   escaping). No client library exists in the image, and none is needed:
-  the format is line-oriented text.
+  the format is line-oriented text. Counter, gauge, and — for the
+  dispatch-span timers — histogram families (:class:`HistogramValue`
+  renders the standard cumulative ``_bucket{le=...}`` / ``_sum`` /
+  ``_count`` triplet).
 * :func:`collect_cache` / :func:`collect_serving` — adapters that turn a
   controller's per-VM stats dicts (:class:`repro.core.controller
   .EticaCache` / ``PartitionedSingleLevelCache``) or a serving manager's
@@ -15,9 +18,16 @@ One module, three layers:
   ``dirty_resident``), the popularity-table overflow counter
   (``pop_drops``), the classifier bypass channel, and — when a
   classifier is configured — per-(VM, IO-class) served hit/miss counts.
+* :func:`collect_telemetry` — adapter over a
+  :class:`repro.runtime.telemetry.TelemetryRecorder`: the
+  ``etica_dispatch_seconds`` span histograms, the journal row counter,
+  the last interval's per-VM request/hit deltas, and the LBICA-style
+  ``etica_overloaded`` flags.
 * :func:`parse_exposition` — a strict parser/validator for the same
   format, used by the golden tests and the fig14 self-check to assert
-  the emitted text round-trips.
+  the emitted text round-trips. Histogram families accept exactly the
+  suffixed sample triplet and are checked for cumulative-monotone
+  buckets, a ``+Inf`` bucket, and bucket/count agreement.
 
 Metric names are a stable public contract (tests/test_metrics_export.py
 pins them); extend, do not rename.
@@ -28,8 +38,9 @@ import dataclasses
 import re
 
 __all__ = [
-    "Metric", "render", "render_cache", "render_serving",
-    "collect_cache", "collect_serving", "parse_exposition",
+    "HistogramValue", "Metric", "render", "render_cache", "render_serving",
+    "collect_cache", "collect_serving", "collect_telemetry",
+    "parse_exposition",
 ]
 
 _NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*\Z")
@@ -47,15 +58,42 @@ class Metric:
     """One metric family: a name, a type, help text, and samples.
 
     ``samples`` is a list of ``(labels, value)`` pairs where ``labels``
-    is a plain ``{label: value}`` dict (may be empty)."""
+    is a plain ``{label: value}`` dict (may be empty). For histogram
+    families the value must be a :class:`HistogramValue`; for counters
+    and gauges it must be a plain number."""
     name: str
-    mtype: str                     # "counter" | "gauge"
+    mtype: str                     # "counter" | "gauge" | "histogram"
     help: str
     samples: list = dataclasses.field(default_factory=list)
 
     def add(self, labels: dict, value) -> "Metric":
         self.samples.append((dict(labels), value))
         return self
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramValue:
+    """One histogram sample: fixed finite bucket bounds, *per-bucket*
+    (non-cumulative) counts with a trailing +Inf overflow slot, and the
+    running sum of observations. The renderer emits the standard
+    cumulative ``_bucket`` series plus ``_sum`` / ``_count``."""
+    le: tuple                      # finite upper bounds, strictly ascending
+    counts: tuple                  # len(le) + 1; last slot = +Inf overflow
+    sum: float
+
+    def validate(self) -> None:
+        if len(self.counts) != len(self.le) + 1:
+            raise ValueError(
+                f"histogram needs {len(self.le) + 1} bucket counts "
+                f"(incl. +Inf), got {len(self.counts)}")
+        if any(b >= a for b, a in zip(self.le, self.le[1:])):
+            raise ValueError(f"histogram bounds not ascending: {self.le}")
+        if any(c < 0 for c in self.counts):
+            raise ValueError(f"negative bucket count in {self.counts}")
+
+    @property
+    def count(self) -> int:
+        return sum(self.counts)
 
 
 def _escape_label(v) -> str:
@@ -85,7 +123,7 @@ def render(metrics: list) -> str:
     for m in metrics:
         if not _NAME_RE.match(m.name):
             raise ValueError(f"bad metric name: {m.name!r}")
-        if m.mtype not in ("counter", "gauge"):
+        if m.mtype not in ("counter", "gauge", "histogram"):
             raise ValueError(f"bad metric type: {m.mtype!r}")
         out.append(f"# HELP {m.name} {_escape_help(m.help)}")
         out.append(f"# TYPE {m.name} {m.mtype}")
@@ -93,6 +131,31 @@ def render(metrics: list) -> str:
             for k in labels:
                 if not _LABEL_RE.match(k):
                     raise ValueError(f"bad label name: {k!r}")
+            if m.mtype == "histogram":
+                if not isinstance(value, HistogramValue):
+                    raise ValueError(
+                        f"{m.name}: histogram sample must be a "
+                        f"HistogramValue, got {type(value).__name__}")
+                if "le" in labels:
+                    raise ValueError(f"{m.name}: reserved label 'le'")
+                value.validate()
+                bounds = tuple(_format_value(b) for b in value.le) + ("+Inf",)
+                cum = 0
+                for bound, c in zip(bounds, value.counts):
+                    cum += int(c)
+                    pairs = list(labels.items()) + [("le", bound)]
+                    lbl = ",".join(f'{k}="{_escape_label(v)}"'
+                                   for k, v in pairs)
+                    out.append(f"{m.name}_bucket{{{lbl}}} {cum}")
+                lbl = ",".join(f'{k}="{_escape_label(v)}"'
+                               for k, v in labels.items())
+                lbl = "{" + lbl + "}" if lbl else ""
+                out.append(f"{m.name}_sum{lbl} {_format_value(value.sum)}")
+                out.append(f"{m.name}_count{lbl} {cum}")
+                continue
+            if isinstance(value, HistogramValue):
+                raise ValueError(
+                    f"{m.name}: {m.mtype} sample cannot be a HistogramValue")
             lbl = ",".join(f'{k}="{_escape_label(v)}"'
                            for k, v in labels.items())
             lbl = "{" + lbl + "}" if lbl else ""
@@ -105,8 +168,13 @@ def parse_exposition(text: str) -> dict:
 
     Returns ``{name: {"type": t, "help": h, "samples": {label_key:
     value}}}`` with ``label_key`` a tuple of sorted ``(k, v)`` pairs.
-    Raises ``ValueError`` on malformed lines, samples without a
-    preceding ``# TYPE``, or duplicate samples."""
+    For histogram families the only legal sample names are
+    ``name_bucket`` (with an ``le`` label), ``name_sum`` and
+    ``name_count``; their keys are prefixed with ``("bucket"|"sum"|
+    "count",)`` and the bucket series is validated (cumulative
+    non-decreasing, ``+Inf`` present and equal to ``_count``). Raises
+    ``ValueError`` on malformed lines, samples without a preceding
+    ``# TYPE``, or duplicate samples."""
     families: dict = {}
     current = None
     for ln, line in enumerate(text.splitlines(), 1):
@@ -135,9 +203,20 @@ def parse_exposition(text: str) -> dict:
         m = _SAMPLE_RE.match(line)
         if not m:
             raise ValueError(f"line {ln}: malformed sample {line!r}")
-        name = m.group("name")
+        name, suffix = m.group("name"), None
         if name not in families or families[name]["type"] is None:
-            raise ValueError(f"line {ln}: sample {name!r} without # TYPE")
+            for sfx in ("_bucket", "_sum", "_count"):
+                base = name[:-len(sfx)]
+                if name.endswith(sfx) and \
+                        families.get(base, {}).get("type") == "histogram":
+                    name, suffix = base, sfx[1:]
+                    break
+            else:
+                raise ValueError(f"line {ln}: sample {m.group('name')!r} "
+                                 f"without # TYPE")
+        if families[name]["type"] == "histogram" and suffix is None:
+            raise ValueError(f"line {ln}: histogram family {name!r} only "
+                             f"emits _bucket/_sum/_count samples")
         if current != name:
             raise ValueError(f"line {ln}: sample {name!r} outside its "
                              f"family block")
@@ -151,11 +230,47 @@ def parse_exposition(text: str) -> dict:
                     raise ValueError(f"line {ln}: malformed labels {raw!r}")
                 labels[pm.group("k")] = pm.group("v")
                 pos = pm.end()
+        if suffix == "bucket" and "le" not in labels:
+            raise ValueError(f"line {ln}: _bucket sample without 'le'")
         key = tuple(sorted(labels.items()))
+        if suffix is not None:
+            key = (suffix,) + key
         if key in families[name]["samples"]:
             raise ValueError(f"line {ln}: duplicate sample {name}{key}")
         families[name]["samples"][key] = float(m.group("value"))
+    for name, fam in families.items():
+        if fam["type"] == "histogram" and fam["samples"]:
+            _validate_histogram_family(name, fam["samples"])
     return families
+
+
+def _validate_histogram_family(name: str, samples: dict) -> None:
+    """Check each label group's bucket series is cumulative
+    non-decreasing, carries ``+Inf``, and agrees with ``_count``."""
+    groups: dict = {}
+    for key, value in samples.items():
+        suffix, labels = key[0], dict(key[1:])
+        base = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+        g = groups.setdefault(base, {"buckets": {}, "sum": None,
+                                     "count": None})
+        if suffix == "bucket":
+            g["buckets"][labels["le"]] = value
+        else:
+            g[suffix] = value
+    for base, g in groups.items():
+        where = f"{name}{dict(base)}"
+        if g["sum"] is None or g["count"] is None:
+            raise ValueError(f"{where}: missing _sum/_count")
+        if "+Inf" not in g["buckets"]:
+            raise ValueError(f"{where}: missing le=\"+Inf\" bucket")
+        les = sorted(g["buckets"],
+                     key=lambda s: float("inf") if s == "+Inf" else float(s))
+        series = [g["buckets"][le] for le in les]
+        if any(b < a for a, b in zip(series, series[1:])):
+            raise ValueError(f"{where}: bucket series not cumulative")
+        if series[-1] != g["count"]:
+            raise ValueError(f"{where}: +Inf bucket {series[-1]} != "
+                             f"_count {g['count']}")
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +391,54 @@ def collect_serving(mgr, prefix: str = "etica_serving") -> list:
                 s.dirty_dropped),
         dirty,
     ]
+
+
+def _vector(x) -> tuple[bool, list]:
+    """(is_vector, values) for a journal cell that may be a numpy array,
+    a numpy scalar, or a plain number — without importing numpy."""
+    try:
+        return True, list(x)
+    except TypeError:
+        return False, [x]
+
+
+def collect_telemetry(rec, prefix: str = "etica",
+                      label: str = "vm") -> list:
+    """Metric families from a :class:`~repro.runtime.telemetry
+    .TelemetryRecorder`: the dispatch-span wall-clock histograms, the
+    journal row counter, and the *last* recorded interval's request/hit
+    deltas and LBICA-style overload flags (``{prefix}_overloaded``).
+    ``label`` names the per-entity axis (``vm`` for the block-cache
+    controllers, ``tenant`` for the serving manager)."""
+    hist = Metric(f"{prefix}_dispatch_seconds", "histogram",
+                  "Wall-clock seconds per fused dispatch span "
+                  "(opt-in timers; block_until_ready at span close).")
+    for name in sorted(rec.spans):
+        s = rec.spans[name]
+        hist.add({"span": name},
+                 HistogramValue(tuple(s.buckets),
+                                tuple(int(c) for c in s.counts),
+                                float(s.total)))
+    ivals = Metric(f"{prefix}_telemetry_intervals_total", "counter",
+                   "Interval samples appended to the telemetry journal.")
+    ivals.add({}, rec.journal.total)
+    i_req = Metric(f"{prefix}_interval_requests", "gauge",
+                   "Requests observed in the last telemetry interval.")
+    i_hit = Metric(f"{prefix}_interval_hits", "gauge",
+                   "Cache hits observed in the last telemetry interval.")
+    over = Metric(f"{prefix}_overloaded", "gauge",
+                  "LBICA-style overload flag from the last interval "
+                  "(windowed hit-ratio collapse or queue pressure).")
+    if rec.journal.total:
+        row = rec.journal.last_row()
+        for metric, col in ((i_req, "requests"), (i_hit, "hits"),
+                            (over, "overloaded")):
+            if col not in rec.journal:
+                continue
+            vec, values = _vector(row[col])
+            for i, v in enumerate(values):
+                metric.add({label: str(i)} if vec else {}, float(v))
+    return [hist, ivals, i_req, i_hit, over]
 
 
 def render_cache(cache, prefix: str = "etica") -> str:

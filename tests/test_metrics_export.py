@@ -59,7 +59,11 @@ def test_render_escapes_labels_and_rejects_bad_names():
     with pytest.raises(ValueError):
         metrics.render([metrics.Metric("bad name", "counter", "h")])
     with pytest.raises(ValueError):
-        metrics.render([metrics.Metric("m", "histogram", "h")])
+        metrics.render([metrics.Metric("m", "summary", "h")])
+    with pytest.raises(ValueError):
+        # histogram is a valid TYPE since PR 9, but its samples must be
+        # HistogramValues — a scalar sample still fails loudly
+        metrics.render([metrics.Metric("m", "histogram", "h").add({}, 1)])
     with pytest.raises(ValueError):
         metrics.render([metrics.Metric("m", "counter", "h")
                         .add({"0bad": "x"}, 1)])

@@ -29,7 +29,13 @@ Checks, over README.md and docs/*.md:
   7. the cleaning/telemetry docs stay wired up: docs/architecture.md
      has a "Background cleaning & telemetry" section that links
      ``runtime/metrics.py``, the README module map names
-     ``runtime/metrics.py``, and the module actually exists on disk.
+     ``runtime/metrics.py``, and the module actually exists on disk;
+  8. the observability docs stay wired up: the interval-telemetry
+     runtime modules (``runtime/telemetry.py``, ``runtime/http.py``,
+     ``tools/run_report.py``) exist on disk, the README module map
+     names the first two, and docs/architecture.md has an
+     "Observability" section that links all three and documents the
+     ``etica_dispatch_seconds`` histogram family.
 
 Stdlib only; exits non-zero with a per-problem report.
 """
@@ -191,6 +197,37 @@ def check_cleaning_docs() -> list[str]:
     return problems
 
 
+def check_observability_docs() -> list[str]:
+    problems = []
+    modules = ("src/repro/runtime/telemetry.py", "src/repro/runtime/http.py",
+               "tools/run_report.py")
+    for mod in modules:
+        if not (ROOT / mod).exists():
+            problems.append(f"{mod} missing (docs describe the interval "
+                            "telemetry runtime)")
+    readme = (ROOT / "README.md").read_text()
+    for mod in ("runtime/telemetry.py", "runtime/http.py"):
+        if mod not in readme:
+            problems.append(f"README.md: module map does not name {mod}")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        text = arch.read_text()
+        if "## Observability" not in text:
+            problems.append("docs/architecture.md: no 'Observability' "
+                            "section")
+        if "etica_dispatch_seconds" not in text:
+            problems.append("docs/architecture.md: the "
+                            "etica_dispatch_seconds histogram family is "
+                            "not documented")
+        targets = set(LINK_RE.findall(text))
+        for mod in ("runtime/telemetry.py", "runtime/http.py",
+                    "tools/run_report.py"):
+            if not any(t.endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: observability "
+                                f"module {mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -205,6 +242,7 @@ def main() -> int:
     problems.extend(check_classification_docs())
     problems.extend(check_serving_docs())
     problems.extend(check_cleaning_docs())
+    problems.extend(check_observability_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:

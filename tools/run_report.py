@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Summarize a telemetry journal spill (JSONL) on the terminal.
+
+    PYTHONPATH=src python tools/run_report.py journal.jsonl [--last N]
+        [--vm V]
+
+Prints one line per recorded interval — requests, hit ratio, dirty
+occupancy, overload flags — plus a run summary, for journals written by
+either controller family (per-VM columns) or the serving manager
+(scalar columns + per-tenant quota). ``--vm`` narrows the per-interval
+series to one VM's columns; ``--last N`` keeps the tail only.
+
+The heavy lifting lives in :mod:`repro.runtime.telemetry`
+(``load_journal`` / ``summarize_journal`` / ``format_report``) so
+benchmarks (fig17) render from exactly the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+# usable straight from a checkout without PYTHONPATH gymnastics
+_SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.runtime.telemetry import (format_report,  # noqa: E402
+                                     load_journal)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Per-interval telemetry journal report")
+    ap.add_argument("journal", help="JSONL spill written by a "
+                                    "TelemetryRecorder journal")
+    ap.add_argument("--last", type=int, default=None,
+                    help="print only the last N intervals")
+    ap.add_argument("--vm", type=int, default=None,
+                    help="narrow the series to one VM/tenant index")
+    args = ap.parse_args(argv)
+    cols = load_journal(args.journal)
+    for line in format_report(cols, last=args.last, vm=args.vm):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
