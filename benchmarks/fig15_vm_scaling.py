@@ -18,6 +18,16 @@ sort per shard, ``[V, chunk]`` blocks double-buffered host->device):
 wall-clock per request plus peak host RSS, with the full trace never
 resident — one resize window at a time. At the smallest streaming scale
 the streamed run is asserted bit-identical to the in-memory run.
+
+The ``fig15/sharded_*`` rows weak-scale the mesh-sharded controller
+(``EticaConfig.mesh``, PR: VM-axis sharding) over 1/2/4/8 device shards
+at a fixed VM count per shard — 128/shard at full scale, so the 8-shard
+row is the 1000-VM-class consolidation run (1024 VMs). Per-VM state,
+datapath, maintenance and sizing all stay shard-local; the largest scale
+is asserted bit-identical to the single-device batched oracle before its
+timing row is reported. On CPU, force placeholder devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``sharding-smoke`` job runs exactly that with ``--smoke``).
 """
 from __future__ import annotations
 
@@ -34,7 +44,7 @@ from repro.core import EticaCache, Trace, make_eci_cache
 from repro.traces import TraceStore, make, make_store
 
 from .common import GEO, Timer, aggregate_stats as _aggregate
-from .common import etica_config, row
+from .common import etica_config, row, vm_mix
 
 PHASES = [1, 2, 4, 8, 16]
 REQS_PER_PHASE = 4_000
@@ -188,8 +198,70 @@ def streaming_scaling(tmp: str) -> None:
             f"stats_equal={'True' if active == STREAM_PHASES[0] else 'n/a'}")
 
 
-def main():
-    num_vms = max(PHASES)
+def sharded_consolidation(smoke: bool = False) -> None:
+    """Weak scaling over a VM-axis device mesh: fixed VMs per shard,
+    1/2/4/8 shards (capped at the visible device count). Every per-VM
+    dispatch is shard-local (asserted by ``tests/test_sharding.py``); the
+    largest scale re-runs on a single device (the batched oracle) and the
+    aggregate Stats must match bit for bit before the rows are trusted.
+    At full scale the 8-shard row is the 1024-VM consolidation run."""
+    import jax
+
+    from repro.launch.mesh import make_vm_mesh
+
+    ndev = len(jax.devices())
+    shard_counts = [n for n in (1, 2, 4, 8) if n <= ndev]
+    per_shard = 16 if smoke else 128
+    reqs = 100 if smoke else 150
+    if ndev < 8:
+        row("fig15/sharded_devices", 0.0,
+            f"only {ndev} device(s) visible — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 for the "
+            "full weak-scaling sweep")
+
+    def build(active: int, total: int, mesh) -> EticaCache:
+        cfg = dataclasses.replace(
+            etica_config("full", dram=12 * active, ssd=25 * active),
+            resize_interval=max(500, total // 3),
+            promo_interval=max(125, total // 12), mesh=mesh)
+        return EticaCache(cfg, active)
+
+    agg_at: dict[int, dict] = {}
+    for n in shard_counts:
+        active = per_shard * n
+        workloads = (WORKLOADS * ((active + len(WORKLOADS) - 1)
+                                  // len(WORKLOADS)))[:active]
+        trace = vm_mix(workloads, reqs=reqs)
+        mesh = make_vm_mesh(n)
+        build(active, len(trace), mesh).run(trace)   # warm-up compile
+        with Timer() as t:
+            res = build(active, len(trace), mesh).run(trace)
+        agg_at[n] = _aggregate(res)
+        hits = np.mean([r.hit_ratio for r in res])
+        row(f"fig15/sharded_{n}shards_{active}vms", t.us / len(trace),
+            f"avg_hit={hits:.3f} reqs={len(trace)} wall_s={t.dt:.2f}")
+
+    # bit-identity gate at the largest scale: same VMs on ONE device
+    n = shard_counts[-1]
+    active = per_shard * n
+    workloads = (WORKLOADS * ((active + len(WORKLOADS) - 1)
+                              // len(WORKLOADS)))[:active]
+    trace = vm_mix(workloads, reqs=reqs)
+    oracle = _aggregate(build(active, len(trace), None).run(trace))
+    assert oracle == agg_at[n], (
+        f"sharded ({n} shards) and single-device batched runs diverged "
+        f"at {active} VMs:\n  sharded: {agg_at[n]}\n  oracle:  {oracle}")
+    row(f"fig15/sharded_oracle_{active}vms", 0.0,
+        f"stats_equal=True shards={n}")
+
+
+def main(smoke: bool = False):
+    global PHASES, REQS_PER_PHASE, STREAM_PHASES, STREAM_REQS_PER_VM
+    if smoke:
+        PHASES = [1, 2, 4]
+        REQS_PER_PHASE = 1_000
+        STREAM_PHASES = [32]
+        STREAM_REQS_PER_VM = 400
     vm_traces = [make(w, REQS_PER_PHASE * len(PHASES), seed=i,
                       addr_offset=i * 10_000_000, scale=0.25)
                  for i, w in enumerate(WORKLOADS)]
@@ -198,7 +270,15 @@ def main():
     baseline_batched_vs_sequential(vm_traces, max(PHASES))
     with tempfile.TemporaryDirectory() as tmp:
         streaming_scaling(tmp)
+    sharded_consolidation(smoke)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="fig15: VM-scaling / consolidation benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer phases/requests, smallest "
+                         "streaming scale only, 16 VMs per shard")
+    main(ap.parse_args().smoke)

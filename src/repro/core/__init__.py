@@ -24,16 +24,20 @@ from .popularity import (PopularityTable, PopularityTracker, block_scores,
                          table_len, table_scores, table_top_known,
                          table_update)
 from .partition import PartitionResult, partition
-from .simulator import (CacheState, PolicyFlags, Stats, capacity_to_ways,
+from .simulator import (CacheState, PolicyFlags, Stats,
+                        aggregate_stats_sharded, capacity_to_ways,
                         evict_blocks, make_cache, make_cache_batch,
                         policy_flags, promote_blocks, resize, resize_batch,
-                        resize_levels, simulate_single_level,
+                        resize_batch_sharded, resize_levels,
+                        resize_levels_sharded, simulate_single_level,
                         simulate_single_level_batch,
                         simulate_single_level_classified,
                         simulate_single_level_classified_batch,
+                        simulate_single_level_sharded,
                         simulate_two_level, simulate_two_level_batch,
                         simulate_two_level_classified,
-                        simulate_two_level_classified_batch, stack_states,
+                        simulate_two_level_classified_batch,
+                        simulate_two_level_sharded, stack_states,
                         unstack_states)
 from .controller import (EticaCache, EticaConfig, Geometry, IntervalLog,
                          PartitionedSingleLevelCache, PolicyChooser,
@@ -54,14 +58,18 @@ __all__ = [
     "table_init", "table_least_popular", "table_len", "table_scores",
     "table_top_known", "table_update",
     "PartitionResult", "partition",
-    "CacheState", "PolicyFlags", "Stats", "capacity_to_ways",
+    "CacheState", "PolicyFlags", "Stats", "aggregate_stats_sharded",
+    "capacity_to_ways",
     "evict_blocks", "make_cache", "make_cache_batch", "policy_flags",
-    "promote_blocks", "resize", "resize_batch", "resize_levels",
+    "promote_blocks", "resize", "resize_batch", "resize_batch_sharded",
+    "resize_levels", "resize_levels_sharded",
     "simulate_single_level", "simulate_single_level_batch",
     "simulate_single_level_classified",
     "simulate_single_level_classified_batch",
+    "simulate_single_level_sharded",
     "simulate_two_level", "simulate_two_level_batch",
     "simulate_two_level_classified", "simulate_two_level_classified_batch",
+    "simulate_two_level_sharded",
     "stack_states", "unstack_states",
     "EticaCache", "EticaConfig", "Geometry", "IntervalLog",
     "PartitionedSingleLevelCache", "PolicyChooser", "SingleLevelConfig",

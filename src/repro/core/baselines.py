@@ -145,7 +145,7 @@ class SizingMetric:
     ref: MetricFn = dataclasses.field(compare=False)  # sequential oracle
 
     def batch(self, addrs: list[np.ndarray], writes: list[np.ndarray],
-              with_reads: bool = False):
+              with_reads: bool = False, mesh=None):
         """(demands [V], grid [G], curves [V, G]) for all VMs at once.
 
         Rows for empty traces are zero — exactly what the sequential loop
@@ -157,17 +157,18 @@ class SizingMetric:
         ``ETICA_SIZING_KERNEL=1``) the O(N^2) distance channel runs
         through the ``kernels/reuse_distance`` Pallas kernel; the pure
         jnp reduction stays the CPU fallback, parity-asserted in
-        ``tests/test_kernels.py``.
+        ``tests/test_kernels.py``. ``mesh`` shards the VM rows across a
+        device mesh on either route (shard-local, bit-identical).
         """
         if _use_kernel_sizing():
             from repro.kernels import use_interpret
             from repro.kernels.reuse_distance import ops as rd_ops
             demands, hits, reads = rd_ops.sizing_metrics_batch(
                 addrs, writes, self.kind, self.grid,
-                interpret=use_interpret())
+                interpret=use_interpret(), mesh=mesh)
         else:
             demands, hits, reads = reuse.sizing_metrics_batch(
-                addrs, writes, self.kind, self.grid)
+                addrs, writes, self.kind, self.grid, mesh=mesh)
         ns = np.array([max(np.shape(a)[0], 1) for a in addrs], np.float64)
         curves = hits.astype(np.float64) / ns[:, None]
         if with_reads:

@@ -48,13 +48,39 @@ from .trace import Trace
 
 
 def _window_source(trace, num_vms: int, window: int, chunk: int,
-                   prefetch: bool):
+                   prefetch: bool, prefetch_depth: int = 2,
+                   pad_vms: int = 0, sharding=None):
     """Normalize ``run``'s input (Trace | TraceStore |
     StreamingTraceSource) into a resize-window iterator. Imported lazily
     so ``repro.core`` does not depend on ``repro.traces`` at import
     time."""
     from repro.traces.stream import window_source
-    return window_source(trace, num_vms, window, chunk, prefetch)
+    return window_source(trace, num_vms, window, chunk, prefetch,
+                         prefetch_depth, pad_vms, sharding)
+
+
+def _mesh_setup(mesh, num_vms: int, batched: bool, classifier):
+    """Validate a controller's mesh config; returns ``(num_rows,
+    sharding)`` — the dead-VM-padded row count the device state carries
+    and the ``NamedSharding`` that places ``[V_pad, ...]`` arrays one row
+    block per device. Dead rows (``ways = 0``, ``addr = -1`` blocks) are
+    exact no-ops, so results stay bit-identical to the unpadded run."""
+    if mesh is None:
+        return num_vms, None
+    if not batched:
+        raise ValueError(
+            "mesh sharding requires batched=True — the sequential "
+            "per-VM oracle has no [V] axis to shard")
+    if classifier is not None:
+        raise ValueError(
+            "mesh sharding does not support an IO classifier yet — the "
+            "classified datapath dispatches have no sharded variants")
+    from jax.sharding import NamedSharding
+
+    from repro.launch.mesh import vm_spec
+    d = mesh.size
+    num_rows = -(-num_vms // d) * d
+    return num_rows, NamedSharding(mesh, vm_spec(mesh))
 
 
 @dataclasses.dataclass
@@ -214,7 +240,13 @@ class EticaConfig:
     mode: str = "full"               # "full" | "npe"
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
-    prefetch: bool = True            # double-buffer host->device blocks
+    prefetch: bool = True            # pipeline host->device blocks
+    prefetch_depth: int = 2          # blocks in flight beyond the consumed
+    mesh: object | None = None       # launch.mesh.make_vm_mesh: shard the
+    #                                  VM axis across devices (requires
+    #                                  batched + fused_maintenance; VM
+    #                                  count padded with dead VMs to a
+    #                                  multiple of the mesh size)
     fused_maintenance: bool = True   # one fused jitted maintenance dispatch
     pop_capacity: int = 8192         # per-VM device popularity-table slots
     classifier: object | None = None  # repro.classify.Classifier | None
@@ -242,22 +274,34 @@ class EticaCache:
     def __init__(self, cfg: EticaConfig, num_vms: int):
         self.cfg = cfg
         self.num_vms = num_vms
+        if cfg.mesh is not None and not cfg.fused_maintenance:
+            raise ValueError(
+                "EticaCache mesh sharding requires fused_maintenance=True "
+                "— the staged maintenance path round-trips through host "
+                "trackers and cannot stay shard-local")
+        # device state carries V_pad rows when a mesh is configured; the
+        # pad rows are dead VMs (ways 0, addr -1 blocks) that every
+        # dispatch treats as exact no-ops. Host-side structures (stats,
+        # logs, trackers) stay at the real VM count.
+        self._rows, self._sharding = _mesh_setup(
+            cfg.mesh, num_vms, cfg.batched, cfg.classifier)
+        rows = self._rows
         gd, gs = cfg.geometry_dram, cfg.geometry_ssd
         if cfg.batched:
-            self.dram = make_cache_batch(num_vms, gd.num_sets, gd.max_ways)
-            self.ssd = make_cache_batch(num_vms, gs.num_sets, gs.max_ways)
+            self.dram = make_cache_batch(rows, gd.num_sets, gd.max_ways)
+            self.ssd = make_cache_batch(rows, gs.num_sets, gs.max_ways)
         else:
             self.dram = [make_cache(gd.num_sets, gd.max_ways)
                          for _ in range(num_vms)]
             self.ssd = [make_cache(gs.num_sets, gs.max_ways)
                         for _ in range(num_vms)]
-        self.ways_dram = np.zeros(num_vms, np.int32)
-        self.ways_ssd = np.zeros(num_vms, np.int32)
-        self.t = np.zeros(num_vms, np.int32)
+        self.ways_dram = np.zeros(rows, np.int32)
+        self.ways_ssd = np.zeros(rows, np.int32)
+        self.t = np.zeros(rows, np.int32)
         # popularity state: the fused batched path keeps ONE [V, K]
         # device-resident table; the staged/sequential paths use the
         # host trackers (the table's bit-exact oracle)
-        self.pop_table = (pop.table_init(num_vms, cfg.pop_capacity)
+        self.pop_table = (pop.table_init(rows, cfg.pop_capacity)
                           if cfg.batched and cfg.fused_maintenance else None)
         self.trackers = [pop.PopularityTracker(cfg.popularity_decay)
                          for _ in range(num_vms)]
@@ -321,8 +365,10 @@ class EticaCache:
         cls = self.classifier is not None
         self.telemetry.sample_cache(
             self.stats,
-            alloc_l1=self.ways_dram.astype(np.int64) * gd.num_sets,
-            alloc_l2=self.ways_ssd.astype(np.int64) * gs.num_sets,
+            alloc_l1=self.ways_dram[:self.num_vms].astype(np.int64)
+            * gd.num_sets,
+            alloc_l2=self.ways_ssd[:self.num_vms].astype(np.int64)
+            * gs.num_sets,
             promoted=self._m_promoted, evict_queue=self._m_evicted,
             cleaned=self._m_cleaned, dirty=self._m_dirty,
             clean_ran=self._m_clean_ran,
@@ -357,9 +403,18 @@ class EticaCache:
                     w_req = w_req[keep]
                 wts.append(w_req)
         if self.cfg.batched:
-            # all VMs' POD decompositions in one vmapped dispatch
+            # all VMs' POD decompositions in one vmapped dispatch (with a
+            # mesh: dead-VM rows pad to the sharded row count and each
+            # device decomposes its own block)
             with self.telemetry.span("sizing") as sp:
-                dists = reuse.pod_distances_batch(addrs, writes, policy)
+                if self.cfg.mesh is not None:
+                    pad = self._rows - self.num_vms
+                    dists = reuse.pod_distances_batch(
+                        addrs + [np.empty(0, np.int32)] * pad,
+                        writes + [np.empty(0, bool)] * pad,
+                        policy, mesh=self.cfg.mesh)[: self.num_vms]
+                else:
+                    dists = reuse.pod_distances_batch(addrs, writes, policy)
                 sp.ready(dists)
         else:
             dists = [reuse.pod_distances(a, w, policy) if a.size else None
@@ -484,6 +539,9 @@ class EticaCache:
         addrs = [empty if c is None else np.asarray(c.addr) for c in chunks]
         writes = [empty.astype(bool) if c is None else np.asarray(c.is_write)
                   for c in chunks]
+        # dead-VM pad rows (mesh only): zero-length like idle VMs
+        addrs += [empty] * (self._rows - self.num_vms)
+        writes += [empty.astype(bool)] * (self._rows - self.num_vms)
         lens = [int(a.shape[0]) for a in addrs]
         live = [v for v, n in enumerate(lens) if n > 0]
         if not live:
@@ -492,24 +550,34 @@ class EticaCache:
         # — results stay on device and feed the fused dispatch directly.
         # ALL VMs ride as rows (idle ones zero-length) so the fused
         # executable is keyed only by the window bucket, not by which
-        # subset of VMs is live.
-        amat, wmat = reuse._pad_rows(addrs, writes, list(range(self.num_vms)),
+        # subset of VMs is live. With a mesh both the decomposition and
+        # the fused maintenance run one row block per device.
+        amat, wmat = reuse._pad_rows(addrs, writes, list(range(self._rows)),
                                      lens)
-        r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
-                                     sizing_reads_only=False, chunk=256)
+        if cfg.mesh is not None:
+            r = reuse._decompose_sharded(cfg.mesh, amat, wmat, Policy.WB,
+                                         False, 256)
+        else:
+            r = reuse._decompose_vmapped(amat, wmat, policy=Policy.WB,
+                                         sizing_reads_only=False, chunk=256)
         with self.telemetry.span("maintenance") as sp:
             (self.ssd, self.pop_table, flushed, promoted, eqlen, pqlen,
              pdrops, cleaned, dirty_left) = maint_ops.maintenance_interval(
                     self.ssd, self.pop_table, r.dist, r.served, amat,
                     np.asarray(lens, np.int32), self.ways_ssd, self.t,
                     evict_frac=cfg.evict_frac, decay=cfg.popularity_decay,
-                    clean_quota=cfg.clean_quota)
+                    clean_quota=cfg.clean_quota, mesh=cfg.mesh)
             sp.ready((self.ssd, self.pop_table, flushed))
         # ONE host transfer for all per-VM counters — the cleaner's two
         # vectors ride the sync the interval already paid for
         flushed, promoted, eqlen, pqlen, pdrops, cleaned, dirty_left = \
             jax.device_get((flushed, promoted, eqlen, pqlen, pdrops,
                             cleaned, dirty_left))
+        # drop the dead-VM pad rows (all-zero: wlen == 0 skips them)
+        flushed, promoted, eqlen, pqlen, pdrops, cleaned, dirty_left = (
+            np.asarray(x)[: self.num_vms]
+            for x in (flushed, promoted, eqlen, pqlen, pdrops, cleaned,
+                      dirty_left))
         for v in live:
             if pdrops[v]:
                 # merge-overflow: popularity entries pushed past the [V, K]
@@ -648,7 +716,12 @@ class EticaCache:
         block when a classifier is configured."""
         cfg = self.cfg
         with self.telemetry.span("datapath") as sp:
-            if cmat is None:
+            if cmat is None and cfg.mesh is not None:
+                self.dram, self.ssd, st, t_end = \
+                    simulator.simulate_two_level_sharded(
+                        a, w, self.dram, self.ssd, self.ways_dram,
+                        self.ways_ssd, cfg.mesh, mode=cfg.mode, t0=self.t)
+            elif cmat is None:
                 self.dram, self.ssd, st, t_end = \
                     simulator.simulate_two_level_batch(
                         a, w, self.dram, self.ssd, self.ways_dram,
@@ -716,7 +789,9 @@ class EticaCache:
         gd, gs = cfg.geometry_dram, cfg.geometry_ssd
         alloc_hist = [[] for _ in range(self.num_vms)]
         source = _window_source(trace, self.num_vms, cfg.resize_interval,
-                                cfg.promo_interval, cfg.prefetch)
+                                cfg.promo_interval, cfg.prefetch,
+                                cfg.prefetch_depth,
+                                self._rows - self.num_vms, self._sharding)
         for win in source.windows():
             subs = win.subs
             # 0) IO classification: one fused dispatch per window, the
@@ -740,11 +815,22 @@ class EticaCache:
                                              gd.max_ways))
             ws = np.asarray(capacity_to_ways(alloc_s, gs.num_sets,
                                              gs.max_ways))
+            # dead-VM pad rows keep zero ways forever
+            wd = np.pad(wd, (0, self._rows - self.num_vms))
+            ws = np.pad(ws, (0, self._rows - self.num_vms))
             if cfg.batched:
-                # both levels resized in ONE jitted dispatch
-                self.dram, self.ssd, _, flushed = simulator.resize_levels(
-                    self.dram, self.ssd, self.ways_dram, wd,
-                    self.ways_ssd, ws)
+                # both levels resized in ONE jitted dispatch (sharded:
+                # every device resizes its own row block)
+                if cfg.mesh is not None:
+                    self.dram, self.ssd, _, flushed = \
+                        simulator.resize_levels_sharded(
+                            self.dram, self.ssd, self.ways_dram, wd,
+                            self.ways_ssd, ws, cfg.mesh)
+                else:
+                    self.dram, self.ssd, _, flushed = \
+                        simulator.resize_levels(
+                            self.dram, self.ssd, self.ways_dram, wd,
+                            self.ways_ssd, ws)
                 flushed = np.asarray(flushed)
                 for v in range(self.num_vms):
                     self.stats[v]["disk_writes"] = (
@@ -812,7 +898,12 @@ class SingleLevelConfig:
     sim_chunk: int = 1_000
     mrc_points: int = 17
     batched: bool = True             # one vmapped dispatch for all VMs
-    prefetch: bool = True            # double-buffer host->device blocks
+    prefetch: bool = True            # pipeline host->device blocks
+    prefetch_depth: int = 2          # blocks in flight beyond the consumed
+    mesh: object | None = None       # launch.mesh.make_vm_mesh: shard the
+    #                                  VM axis across devices (requires
+    #                                  batched; VM count padded with dead
+    #                                  VMs to a multiple of the mesh size)
     classifier: object | None = None  # repro.classify.Classifier | None
     telemetry: object | None = None  # TelemetryRecorder | None (default
     #                                  bounded recorder when None)
@@ -880,14 +971,19 @@ class PartitionedSingleLevelCache:
         self.num_vms = num_vms
         self.metric = metric
         self.policy_fn = policy_fn
+        # device state carries dead-VM-padded rows with a mesh (see
+        # EticaCache) — host structures stay at the real VM count
+        self._rows, self._sharding = _mesh_setup(
+            cfg.mesh, num_vms, cfg.batched, cfg.classifier)
         g = cfg.geometry
         if cfg.batched:
-            self.caches = make_cache_batch(num_vms, g.num_sets, g.max_ways)
+            self.caches = make_cache_batch(self._rows, g.num_sets,
+                                           g.max_ways)
         else:
             self.caches = [make_cache(g.num_sets, g.max_ways)
                            for _ in range(num_vms)]
-        self.ways = np.zeros(num_vms, np.int32)
-        self.t = np.zeros(num_vms, np.int32)
+        self.ways = np.zeros(self._rows, np.int32)
+        self.t = np.zeros(self._rows, np.int32)
         self.stats = [dict() for _ in range(num_vms)]
         self.logs: list[IntervalLog] = []
         if cfg.telemetry is not None:
@@ -913,7 +1009,8 @@ class PartitionedSingleLevelCache:
         cls = self.classifier is not None
         self.telemetry.sample_cache(
             self.stats,
-            alloc_l2=self.ways.astype(np.int64) * self.cfg.geometry.num_sets,
+            alloc_l2=self.ways[:self.num_vms].astype(np.int64)
+            * self.cfg.geometry.num_sets,
             cls_hits=self.cls_hits if cls else None,
             cls_miss=self.cls_miss if cls else None)
 
@@ -926,7 +1023,9 @@ class PartitionedSingleLevelCache:
         cfg = self.cfg
         alloc_hist = [[] for _ in range(self.num_vms)]
         source = _window_source(trace, self.num_vms, cfg.resize_interval,
-                                cfg.sim_chunk, cfg.prefetch)
+                                cfg.sim_chunk, cfg.prefetch,
+                                cfg.prefetch_depth,
+                                self._rows - self.num_vms, self._sharding)
         for win in source.windows():
             subs = win.subs
             # IO classification: bypass-class requests never reach the
@@ -951,10 +1050,16 @@ class PartitionedSingleLevelCache:
                 # the dynamic policy choosers' read counts ride the same
                 # dispatch
                 with self.telemetry.span("sizing") as sp:
+                    pad = self._rows - self.num_vms
                     dem, g_, cur, reads = self.metric.batch(
-                        [np.asarray(s.addr) for s in subs_sz],
-                        [np.asarray(s.is_write) for s in subs_sz],
-                        with_reads=True)
+                        [np.asarray(s.addr) for s in subs_sz]
+                        + [np.empty(0, np.int32)] * pad,
+                        [np.asarray(s.is_write) for s in subs_sz]
+                        + [np.empty(0, bool)] * pad,
+                        with_reads=True, mesh=cfg.mesh)
+                    dem, cur, reads = (dem[:self.num_vms],
+                                       cur[:self.num_vms],
+                                       reads[:self.num_vms])
                     sp.ready((dem, cur))
                 same_grid = np.array_equal(g_, grid)
                 for v, sub in enumerate(subs_sz):
@@ -989,9 +1094,15 @@ class PartitionedSingleLevelCache:
                                          [p.value for p in policies]))
             w_new = np.asarray(capacity_to_ways(
                 alloc, cfg.geometry.num_sets, cfg.geometry.max_ways))
+            # dead-VM pad rows keep zero ways forever
+            w_new = np.pad(w_new, (0, self._rows - self.num_vms))
             if cfg.batched:
-                self.caches, flushed = resize_batch(self.caches, self.ways,
-                                                    w_new)
+                if cfg.mesh is not None:
+                    self.caches, flushed = simulator.resize_batch_sharded(
+                        self.caches, self.ways, w_new, cfg.mesh)
+                else:
+                    self.caches, flushed = resize_batch(
+                        self.caches, self.ways, w_new)
                 flushed = np.asarray(flushed)
                 for v in range(self.num_vms):
                     self.stats[v]["disk_writes"] = (
@@ -1011,7 +1122,10 @@ class PartitionedSingleLevelCache:
             for v in range(self.num_vms):
                 alloc_hist[v].append(int(alloc[v]))
             self.ways = w_new
-            flags = policy_flags(policies)
+            # pad rows get the WB default — dead VMs (0 ways, addr -1
+            # blocks) never touch their cache whatever the policy says
+            flags = policy_flags(
+                policies + [Policy.WB] * (self._rows - self.num_vms))
             if cls_subs is not None:
                 # per-(VM, class) policy flags + insertion way ranges
                 flags_vc = _class_policy_flags(
@@ -1022,7 +1136,12 @@ class PartitionedSingleLevelCache:
                 # ahead of the simulator when prefetch is on)
                 for k, (a, wr, kth) in enumerate(win.blocks()):
                     with self.telemetry.span("datapath") as sp:
-                        if cls_subs is None:
+                        if cls_subs is None and cfg.mesh is not None:
+                            self.caches, st, t_end = \
+                                simulator.simulate_single_level_sharded(
+                                    a, wr, self.caches, self.ways, flags,
+                                    cfg.mesh, t0=self.t)
+                        elif cls_subs is None:
                             self.caches, st, t_end = \
                                 simulator.simulate_single_level_batch(
                                     a, wr, self.caches, self.ways, flags,

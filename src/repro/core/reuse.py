@@ -62,7 +62,12 @@ import numpy as np
 
 from .policies import Policy
 
-COLD = jnp.int32(-1)  # sentinel distance for cold / not-served accesses
+# Sentinel distance for cold / not-served accesses. A numpy scalar, not a
+# device-committed jnp constant: closing over a committed array inside a
+# ``shard_map`` body makes GSPMD treat it as sharded operand state and
+# insert spurious all-reduces (observed on CPU host devices), corrupting
+# every shard but the first. np scalars weave into traces as literals.
+COLD = np.int32(-1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,6 +95,22 @@ class DistResult:
 # prev/next same-address helpers (sort-based, O(N log N))
 # ---------------------------------------------------------------------------
 
+def argsort_stable(x: jax.Array) -> jax.Array:
+    """Stable ascending argsort over the last axis via raw ``lax.sort``.
+
+    Equivalent to ``jnp.argsort(x, stable=True)`` (a stable argsort is
+    uniquely determined), but shard-safe: ``jnp.argsort`` is internally
+    jitted, and under ``vmap`` inside a manual ``shard_map`` region GSPMD
+    wraps the nested sort in spurious cross-shard all-reduces (observed on
+    CPU host devices — results corrupt on every device but the first).
+    Sorting ``(keys, iota)`` with ``num_keys=1`` stays a plain sort HLO.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    _, out = jax.lax.sort((x, iota), dimension=x.ndim - 1,
+                          is_stable=True, num_keys=1)
+    return out
+
+
 def _prev_same(addr: jax.Array, mask: jax.Array) -> jax.Array:
     """prev[i] = largest j < i with addr[j] == addr[i] and mask[j]; else -1.
 
@@ -99,7 +120,7 @@ def _prev_same(addr: jax.Array, mask: jax.Array) -> jax.Array:
     # Stable sort by address keeps original index order within each address
     # run; a scan down the sorted sequence then yields, for every position
     # (masked or not), the nearest *masked* predecessor in its run.
-    order = jnp.argsort(addr, stable=True)
+    order = argsort_stable(addr)
     s_addr = addr[order]
     s_mask = mask[order]
     s_idx = order.astype(jnp.int32)
@@ -266,8 +287,57 @@ def _decompose_vmapped(amat, wmat, policy, sizing_reads_only, chunk):
                                 chunk=chunk))(amat, wmat)
 
 
+# --- sharded variants (VM axis split across a 1-d device mesh) -------------
+#
+# These routes deliberately do NOT use ``shard_map``: on CPU host devices
+# the GSPMD partitioner wraps the decompose body (``_count_between`` fed by
+# a data-dependent touch mask, as the RO/WBWO policies and the
+# reuse_intensity metric produce) in spurious cross-shard all-reduces that
+# corrupt every device but the first — and which outputs trigger it shifts
+# unpredictably with the returned pytree. Instead each device runs the
+# *same* single-device jitted executable as the oracle path on its own
+# ``[V/d, b]`` row block (dispatched asynchronously, gathered on the
+# host), so results are bit-identical and zero collectives exist by
+# construction. The clean shard_map routes (datapath, maintenance,
+# resize, stats aggregation) live in ``core.simulator`` /
+# ``kernels.maintenance``.
+
+def _decompose_sharded(mesh, amat, wmat, policy, sizing_reads_only, chunk):
+    from ..launch.mesh import device_row_blocks
+    parts = []
+    for dev, rows in device_row_blocks(amat.shape[0], mesh):
+        a = jax.device_put(jnp.asarray(amat[rows]), dev)
+        w = jax.device_put(jnp.asarray(wmat[rows]), dev)
+        parts.append(_decompose_vmapped(a, w, policy=policy,
+                                        sizing_reads_only=sizing_reads_only,
+                                        chunk=chunk))
+    return DistResult(*[
+        np.concatenate([np.asarray(getattr(p, f)) for p in parts], axis=0)
+        for f in ("dist", "served", "touch")])
+
+
+def _sizing_sharded(mesh, amat, wmat, nvec, grid, kind, chunk):
+    from ..launch.mesh import device_row_blocks
+    parts = []
+    for dev, rows in device_row_blocks(amat.shape[0], mesh):
+        a = jax.device_put(jnp.asarray(amat[rows]), dev)
+        w = jax.device_put(jnp.asarray(wmat[rows]), dev)
+        n = jax.device_put(jnp.asarray(nvec[rows]), dev)
+        g = jax.device_put(jnp.asarray(grid), dev)
+        parts.append(_sizing_reduce_vmapped(a, w, n, g,
+                                            kind=kind, chunk=chunk))
+    return tuple(
+        np.concatenate([np.asarray(p[i]) for p in parts], axis=0)
+        for i in range(3))
+
+
+def _require_divisible(num_rows: int, mesh) -> None:
+    from ..launch.mesh import require_vm_divisible
+    require_vm_divisible(num_rows, mesh)
+
+
 def _distances_batch(addrs, writes, policy: Policy, sizing_reads_only: bool,
-                     chunk: int) -> list[DistResult | None]:
+                     chunk: int, mesh=None) -> list[DistResult | None]:
     """Decompose many traces in ONE vmapped dispatch.
 
     ``addrs``/``writes`` are ragged per-VM request lists; rows are padded
@@ -275,35 +345,53 @@ def _distances_batch(addrs, writes, policy: Policy, sizing_reads_only: bool,
     writes as :func:`_pad_trace` (exact, see above), so per-VM results are
     bit-identical to calling the unbatched functions per VM. Empty rows
     come back as ``None``.
+
+    With ``mesh`` the rows are split over the mesh's VM axis and each
+    device decomposes its own block shard-locally. Empty rows are then
+    packed too (as pure-pad rows, which the row-wise computation treats
+    identically), so the row count — which must be divisible by the mesh
+    size — lines up with the shard layout.
     """
     lens = [int(np.shape(a)[0]) for a in addrs]
     live = [v for v, n in enumerate(lens) if n > 0]
     if not live:
         return [None] * len(lens)
-    amat, wmat = _pad_rows(addrs, writes, live, lens)
-    r = _decompose_vmapped(amat, wmat, policy=policy,
-                           sizing_reads_only=sizing_reads_only, chunk=chunk)
+    if mesh is not None:
+        _require_divisible(len(lens), mesh)
+        rows = list(range(len(lens)))
+        amat, wmat = _pad_rows(addrs, writes, rows, lens)
+        r = _decompose_sharded(mesh, amat, wmat, policy,
+                               sizing_reads_only, chunk)
+        idx = rows
+    else:
+        amat, wmat = _pad_rows(addrs, writes, live, lens)
+        r = _decompose_vmapped(amat, wmat, policy=policy,
+                               sizing_reads_only=sizing_reads_only,
+                               chunk=chunk)
+        idx = live
     out: list[DistResult | None] = [None] * len(lens)
     dist, served, touch = (np.asarray(r.dist), np.asarray(r.served),
                            np.asarray(r.touch))
-    for i, v in enumerate(live):
-        out[v] = DistResult(dist=dist[i, : lens[v]],
-                            served=served[i, : lens[v]],
-                            touch=touch[i, : lens[v]])
+    for i, v in enumerate(idx):
+        if lens[v] > 0:
+            out[v] = DistResult(dist=dist[i, : lens[v]],
+                                served=served[i, : lens[v]],
+                                touch=touch[i, : lens[v]])
     return out
 
 
 def pod_distances_batch(addrs, writes, policy: Policy,
-                        chunk: int = 256) -> list[DistResult | None]:
+                        chunk: int = 256, mesh=None) -> list[DistResult | None]:
     """Per-VM :func:`pod_distances` in one vmapped dispatch (ragged input,
-    bit-identical per-VM results; empty traces -> ``None``)."""
-    return _distances_batch(addrs, writes, policy, True, chunk)
+    bit-identical per-VM results; empty traces -> ``None``). ``mesh``
+    shards the VM rows across devices (shard-local, no collectives)."""
+    return _distances_batch(addrs, writes, policy, True, chunk, mesh=mesh)
 
 
 def trd_distances_batch(addrs, writes,
-                        chunk: int = 256) -> list[DistResult | None]:
+                        chunk: int = 256, mesh=None) -> list[DistResult | None]:
     """Per-VM :func:`trd_distances` in one vmapped dispatch."""
-    return _distances_batch(addrs, writes, Policy.WB, False, chunk)
+    return _distances_batch(addrs, writes, Policy.WB, False, chunk, mesh=mesh)
 
 
 def urd_distances(addr, is_write, chunk: int = 256) -> DistResult:
@@ -402,7 +490,7 @@ def mrc(trace, policy: Policy, sizes: np.ndarray) -> np.ndarray:
 
 SIZING_KINDS = ("urd", "trd", "wss", "reuse_intensity")
 
-_SERVED_BIG = jnp.int32(2**30)  # not-served sentinel for hit counting
+_SERVED_BIG = np.int32(2**30)  # not-served sentinel (np: shard-safe, see COLD)
 
 
 def read_count(is_write, n_valid=None) -> jax.Array:
@@ -476,7 +564,7 @@ def _sizing_reduce_vmapped(amat, wmat, nvec, grid, kind, chunk):
 
 
 def sizing_metrics_batch(addrs, writes, kind: str, grid,
-                         chunk: int = 256
+                         chunk: int = 256, mesh=None
                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Evaluate one sizing metric for many VM sub-traces in ONE dispatch.
 
@@ -495,6 +583,10 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid,
       trailing writes as :func:`_pad_trace`, which no real distance window
       can see, and the WSS distinct-count and read count mask the pad tail
       explicitly.
+
+    With ``mesh`` the VM rows (all of them, empty ones packed as pure-pad
+    rows that reduce to zeros) are split over the mesh's VM axis; each
+    device runs its own shard-local reduction and no collectives exist.
     """
     if kind not in SIZING_KINDS:
         raise ValueError(f"kind must be one of {SIZING_KINDS}, got {kind!r}")
@@ -505,6 +597,22 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid,
     reads = np.zeros(len(lens), np.int64)
     live = [v for v, n in enumerate(lens) if n > 0]
     if not live:
+        return demands, hits, reads
+    if mesh is not None:
+        _require_divisible(len(lens), mesh)
+        rows = list(range(len(lens)))
+        amat, wmat = _pad_rows(addrs, writes, rows, lens)
+        nvec = np.array(lens, np.int32)
+        d, h, r = _sizing_sharded(mesh, amat, wmat, nvec, grid, kind, chunk)
+        demands[:] = np.asarray(d, np.int64)
+        hits[:] = np.asarray(h, np.int64)
+        reads[:] = np.asarray(r, np.int64)
+        # pure-pad rows reduce to zeros row-wise; re-zero anyway so empty
+        # traces match the unsharded contract exactly by construction
+        empty = [v for v, n in enumerate(lens) if n == 0]
+        demands[empty] = 0
+        hits[empty] = 0
+        reads[empty] = 0
         return demands, hits, reads
     amat, wmat = _pad_rows(addrs, writes, live, lens)
     nvec = np.array([lens[v] for v in live], np.int32)

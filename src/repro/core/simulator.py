@@ -826,6 +826,157 @@ def resize_levels(dram: CacheState, ssd: CacheState, old_dram, new_dram,
     return dram, ssd, fl_d, fl_s
 
 
+# ---------------------------------------------------------------------------
+# sharded dispatches (VM axis split across a 1-d device mesh)
+# ---------------------------------------------------------------------------
+#
+# Same vmapped step functions as the batched entry points, wrapped in
+# ``shard_map`` over a VM mesh (``launch.mesh.make_vm_mesh``): each device
+# scans its own ``[V/d, N]`` block against its own ``[V/d, S, W]`` state
+# shard. Everything is shard-local — the compiled HLO contains no
+# collectives (asserted by the sharding tests) — so per-VM results are
+# bit-identical to the single-device batched dispatch. The ONLY
+# cross-device traffic in a sharded controller run is
+# :func:`aggregate_stats_sharded`'s psum. Builders are lru-cached on
+# (mesh, statics) so controller intervals reuse compiled executables.
+
+def _vm_io(mesh):
+    from ..launch.mesh import require_vm_divisible, vm_spec
+    return vm_spec(mesh), require_vm_divisible
+
+
+@functools.lru_cache(maxsize=None)
+def _two_level_sharded(mesh, mode):
+    from jax.experimental import shard_map
+    spec, _ = _vm_io(mesh)
+
+    def body(addr, is_write, dram, ssd, ways_dram, ways_ssd, t0):
+        return jax.vmap(
+            lambda a, w, dr, ss, wd, ws, tt: _simulate_two_level(
+                a, w, dr, ss, wd, ws, mode, tt)
+        )(addr, is_write, dram, ssd, ways_dram, ways_ssd, t0)
+
+    return jax.jit(shard_map.shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 7, out_specs=spec,
+        check_rep=False))
+
+
+def simulate_two_level_sharded(addr, is_write, dram: CacheState,
+                               ssd: CacheState, ways_dram, ways_ssd,
+                               mesh, mode: str = "full", t0=0):
+    """:func:`simulate_two_level_batch` with VM rows split over ``mesh``."""
+    spec, require = _vm_io(mesh)
+    v = np.shape(addr)[0]
+    require(v, mesh)
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    return _two_level_sharded(mesh, mode)(
+        jnp.asarray(addr, jnp.int32), jnp.asarray(is_write), dram, ssd,
+        jnp.asarray(ways_dram, jnp.int32), jnp.asarray(ways_ssd, jnp.int32),
+        t0)
+
+
+@functools.lru_cache(maxsize=None)
+def _single_level_sharded(mesh):
+    from jax.experimental import shard_map
+    from jax.sharding import PartitionSpec
+    spec, _ = _vm_io(mesh)
+
+    def body(addr, is_write, state, ways_active, flags, t_cache, t0):
+        return jax.vmap(
+            _simulate_single_level, in_axes=(0, 0, 0, 0, 0, None, 0)
+        )(addr, is_write, state, ways_active, flags, t_cache, t0)
+
+    return jax.jit(shard_map.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, PartitionSpec(), spec),
+        out_specs=spec, check_rep=False))
+
+
+def simulate_single_level_sharded(addr, is_write, state: CacheState,
+                                  ways_active, flags: PolicyFlags, mesh,
+                                  t_cache=T_SSD, t0=0):
+    """:func:`simulate_single_level_batch` with VM rows split over ``mesh``.
+
+    ``flags`` fields are broadcast to ``[V]`` (scalar flags replicate)."""
+    spec, require = _vm_io(mesh)
+    v = np.shape(addr)[0]
+    require(v, mesh)
+    t0 = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (v,))
+    flags = PolicyFlags(
+        *[jnp.broadcast_to(jnp.asarray(f), (v,)) for f in flags])
+    return _single_level_sharded(mesh)(
+        jnp.asarray(addr, jnp.int32), jnp.asarray(is_write), state,
+        jnp.asarray(ways_active, jnp.int32), flags, jnp.float32(t_cache), t0)
+
+
+@functools.lru_cache(maxsize=None)
+def _resize_levels_sharded(mesh):
+    from jax.experimental import shard_map
+    spec, _ = _vm_io(mesh)
+
+    def body(dram, ssd, old_dram, new_dram, old_ssd, new_ssd):
+        dram, fl_d = jax.vmap(resize)(dram, old_dram, new_dram)
+        ssd, fl_s = jax.vmap(resize)(ssd, old_ssd, new_ssd)
+        return dram, ssd, fl_d, fl_s
+
+    return jax.jit(shard_map.shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 6, out_specs=spec,
+        check_rep=False))
+
+
+def resize_levels_sharded(dram: CacheState, ssd: CacheState, old_dram,
+                          new_dram, old_ssd, new_ssd, mesh):
+    """:func:`resize_levels` with VM rows split over ``mesh``."""
+    _, require = _vm_io(mesh)
+    require(int(dram.tags.shape[0]), mesh)
+    as_i32 = lambda x: jnp.asarray(x, jnp.int32)
+    return _resize_levels_sharded(mesh)(
+        dram, ssd, as_i32(old_dram), as_i32(new_dram), as_i32(old_ssd),
+        as_i32(new_ssd))
+
+
+@functools.lru_cache(maxsize=None)
+def _resize_batch_sharded(mesh):
+    from jax.experimental import shard_map
+    spec, _ = _vm_io(mesh)
+    return jax.jit(shard_map.shard_map(
+        lambda st, old, new: jax.vmap(resize)(st, old, new),
+        mesh=mesh, in_specs=(spec,) * 3, out_specs=spec, check_rep=False))
+
+
+def resize_batch_sharded(state: CacheState, old_ways, new_ways, mesh):
+    """:data:`resize_batch` with VM rows split over ``mesh``."""
+    _, require = _vm_io(mesh)
+    require(int(state.tags.shape[0]), mesh)
+    return _resize_batch_sharded(mesh)(
+        state, jnp.asarray(old_ways, jnp.int32),
+        jnp.asarray(new_ways, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _aggregate_stats_sharded(mesh):
+    from jax.experimental import shard_map
+    from jax.sharding import PartitionSpec
+    spec, _ = _vm_io(mesh)
+    ax = mesh.axis_names[0]
+
+    def body(st):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(jnp.sum(x, axis=0), ax), st)
+
+    return jax.jit(shard_map.shard_map(
+        body, mesh=mesh, in_specs=(spec,), out_specs=PartitionSpec(),
+        check_rep=False))
+
+
+def aggregate_stats_sharded(stats: Stats, mesh) -> Stats:
+    """Total :class:`Stats` over sharded ``[V]`` per-VM stats: one
+    shard-local sum + ONE psum per leaf — the only cross-device collective
+    a sharded controller run performs."""
+    stats = Stats(*[jnp.asarray(x) for x in stats])
+    return _aggregate_stats_sharded(mesh)(stats)
+
+
 def resident_blocks(state: CacheState, ways_active: int) -> np.ndarray:
     tags = np.asarray(state.tags)[:, : max(ways_active, 0)]
     return tags[tags >= 0]

@@ -259,12 +259,36 @@ def _maintenance_impl(ssd: CacheState, table: pop.PopularityTable,
             dirty_left)
 
 
+@functools.lru_cache(maxsize=None)
+def _maintenance_sharded(mesh, evict_frac, decay, clean_quota, ts, qc,
+                         interpret):
+    """``shard_map`` of :func:`_maintenance_impl` over a VM mesh: each
+    device runs the full three-stage maintenance on its own ``[V/d, ...]``
+    block of states/queues. Queue widths depend only on geometry and
+    window bucket (never on V), so per-shard shapes line up and the
+    compiled HLO is collective-free (asserted by the sharding tests)."""
+    from jax.experimental import shard_map
+
+    from repro.launch.mesh import vm_spec
+    spec = vm_spec(mesh)
+
+    def body(ssd, table, dist, served, waddr, wlen, ways, t):
+        return _maintenance_impl(
+            ssd, table, dist, served, waddr, wlen, ways, t,
+            evict_frac=evict_frac, decay=decay, clean_quota=clean_quota,
+            ts=ts, qc=qc, interpret=interpret)
+
+    return jax.jit(shard_map.shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 8, out_specs=(spec,) * 9,
+        check_rep=False))
+
+
 def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
                          dist, served, waddr, wlen, ways, t, *,
                          evict_frac: float, decay: float,
                          clean_quota: int = 0,
                          ts: int = DEFAULT_TS, qc: int = DEFAULT_QC,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None, mesh=None):
     """One interval of ETICA maintenance for all VMs, fused.
 
     Args:
@@ -290,13 +314,24 @@ def maintenance_interval(ssd: CacheState, table: pop.PopularityTable,
     (``Stats.pop_drops``); ``cleaned`` is the cleaner's flush count and
     ``dirty_left`` the dirty blocks still resident in active ways after
     the interval (``Stats.flushes`` / ``Stats.dirty_resident``).
+
+    ``mesh`` splits the VM axis over a 1-d device mesh (V divisible by
+    the mesh size; pad with dead ``wlen == 0`` VMs first): the whole
+    dispatch runs shard-local with bit-identical per-VM results.
     """
     interpret = use_interpret() if interpret is None else interpret
+    args = (ssd, table, jnp.asarray(dist, jnp.int32),
+            jnp.asarray(served, bool), jnp.asarray(waddr, jnp.int32),
+            jnp.asarray(wlen, jnp.int32), jnp.asarray(ways, jnp.int32),
+            jnp.asarray(t, jnp.int32))
+    if mesh is not None:
+        from repro.launch.mesh import require_vm_divisible
+        require_vm_divisible(int(ssd.tags.shape[0]), mesh)
+        return _maintenance_sharded(
+            mesh, float(evict_frac), float(decay), int(clean_quota), ts, qc,
+            interpret)(*args)
     return _maintenance_impl(
-        ssd, table, jnp.asarray(dist, jnp.int32), jnp.asarray(served, bool),
-        jnp.asarray(waddr, jnp.int32), jnp.asarray(wlen, jnp.int32),
-        jnp.asarray(ways, jnp.int32), jnp.asarray(t, jnp.int32),
-        evict_frac=float(evict_frac), decay=float(decay),
+        *args, evict_frac=float(evict_frac), decay=float(decay),
         clean_quota=int(clean_quota), ts=ts, qc=qc, interpret=interpret)
 
 

@@ -135,9 +135,30 @@ def _sizing_reduce_vmapped(amat, wmat, nvec, grid, kind, interpret, ti, tj):
     return jax.vmap(one)(amat, wmat, nvec)
 
 
+def _sizing_sharded(mesh, amat, wmat, nvec, grid, kind, interpret, ti, tj):
+    # Manual per-device dispatch, not shard_map: see core.reuse — the CPU
+    # GSPMD partitioner corrupts the decompose body with spurious
+    # all-reduces. Each device runs the same single-device jitted
+    # executable as the oracle path on its own row block (async dispatch,
+    # host-side gather), so this stays bit-identical and collective-free.
+    from repro.launch.mesh import device_row_blocks
+    parts = []
+    for dev, rows in device_row_blocks(amat.shape[0], mesh):
+        a = jax.device_put(jnp.asarray(amat[rows]), dev)
+        w = jax.device_put(jnp.asarray(wmat[rows]), dev)
+        n = jax.device_put(jnp.asarray(nvec[rows]), dev)
+        g = jax.device_put(jnp.asarray(grid), dev)
+        parts.append(_sizing_reduce_vmapped(a, w, n, g, kind=kind,
+                                            interpret=interpret,
+                                            ti=ti, tj=tj))
+    return tuple(
+        np.concatenate([np.asarray(p[i]) for p in parts], axis=0)
+        for i in range(3))
+
+
 def sizing_metrics_batch(addrs, writes, kind: str, grid, *,
                          interpret: bool = True, ti: int = 256,
-                         tj: int = 512):
+                         tj: int = 512, mesh=None):
     """Kernel-backed ``core.reuse.sizing_metrics_batch``: same ragged
     contract and ``(demands, hit_counts, read_counts)`` returns, but the
     O(N^2) distance channel of every VM runs through the Pallas
@@ -145,7 +166,9 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid, *,
     batching rule adds the VM axis to the kernel grid). This is what
     ``SizingMetric.batch`` dispatches to when the backend compiles
     Pallas (TPU) — bit-identical to the jnp path, which stays the CPU
-    fallback and parity oracle (``tests/test_kernels.py``).
+    fallback and parity oracle (``tests/test_kernels.py``). ``mesh``
+    splits the VM rows over a device mesh, shard-local like the jnp
+    route (empty rows packed as pure-pad rows that reduce to zeros).
     """
     if kind not in core_reuse.SIZING_KINDS:
         raise ValueError(
@@ -157,6 +180,23 @@ def sizing_metrics_batch(addrs, writes, kind: str, grid, *,
     reads = np.zeros(len(lens), np.int64)
     live = [v for v, n in enumerate(lens) if n > 0]
     if not live:
+        return demands, hits, reads
+    if mesh is not None:
+        from repro.launch.mesh import require_vm_divisible
+        require_vm_divisible(len(lens), mesh)
+        rows = list(range(len(lens)))
+        amat, wmat = core_reuse._pad_rows(addrs, writes, rows, lens)
+        d, h, r = _sizing_sharded(mesh, amat, wmat,
+                                  np.array(lens, np.int32),
+                                  np.asarray(grid, np.int32),
+                                  kind, interpret, ti, tj)
+        demands[:] = np.asarray(d, np.int64)
+        hits[:] = np.asarray(h, np.int64)
+        reads[:] = np.asarray(r, np.int64)
+        empty = [v for v, n in enumerate(lens) if n == 0]
+        demands[empty] = 0
+        hits[empty] = 0
+        reads[empty] = 0
         return demands, hits, reads
     amat, wmat = core_reuse._pad_rows(addrs, writes, live, lens)
     nvec = np.array([lens[v] for v in live], np.int32)

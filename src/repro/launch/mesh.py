@@ -26,18 +26,81 @@ def make_production_mesh(*, multi_pod: bool = False):
         return jax.make_mesh(shape, axes)
     # dry-run host platform exposes 512 placeholder devices; the
     # single-pod mesh uses the first 256 of them.
-    assert len(devices) >= n, (
-        f"need {n} devices for mesh {shape}, have {len(devices)} — run "
-        "under launch/dryrun.py which forces "
-        "xla_force_host_platform_device_count=512")
+    if len(devices) < n:
+        raise ValueError(
+            f"need {n} devices for mesh shape {shape} with axes {axes}, "
+            f"have {len(devices)} — run under launch/dryrun.py which "
+            "forces xla_force_host_platform_device_count=512")
     return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_host_mesh(model: int = 1):
     """Degenerate mesh over whatever devices exist (tests on 1 CPU)."""
     n = len(jax.devices())
-    assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    if n % model == 0:
+        return jax.make_mesh((n // model, model), ("data", "model"))
+    raise ValueError(
+        f"host mesh needs the device count ({n}) divisible by the "
+        f"requested model-axis size ({model}) for shape "
+        f"({n // model}, {model})")
+
+
+def make_vm_mesh(num_shards: int | None = None):
+    """1-d VM-axis mesh over available devices, axis name ``'vm'``.
+
+    The consolidation meshes: batched ``[V, S, W]`` controller state is
+    split over this axis by ``shard_map``, one block of VMs per device.
+    ``num_shards=None`` takes every device. On CPU CI, force placeholder
+    devices first — ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    before the first jax init (same trick as launch/dryrun.py).
+    """
+    devices = jax.devices()
+    n = len(devices) if num_shards is None else num_shards
+    if n > len(devices):
+        raise ValueError(
+            f"VM mesh wants {n} shards but only {len(devices)} devices "
+            "exist — on CPU, set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<n> before "
+            "jax initializes")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("vm",))
+
+
+def vm_spec(mesh):
+    """``PartitionSpec`` over a VM mesh's single axis (prefix spec: the
+    leading VM dimension of any-rank arrays is the sharded one)."""
+    from jax.sharding import PartitionSpec
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"VM-axis sharding needs a 1-d mesh, got axes {mesh.axis_names}")
+    return PartitionSpec(mesh.axis_names[0])
+
+
+def require_vm_divisible(num_vms: int, mesh) -> None:
+    """Reject VM counts the mesh cannot split evenly (callers pad first)."""
+    if num_vms % mesh.size != 0:
+        raise ValueError(
+            f"sharded dispatch needs the VM count ({num_vms}) divisible by "
+            f"the mesh size ({mesh.size}); pad with dead VMs (addr=-1 / "
+            f"empty sub-traces) first")
+
+
+def device_row_blocks(num_rows: int, mesh):
+    """``[(device, row_slice), ...]`` splitting ``num_rows`` evenly over
+    the mesh's devices, in mesh order.
+
+    The manual-dispatch analogue of ``vm_spec``: routes that cannot trust
+    ``shard_map`` (the CPU GSPMD partitioner wraps some row-local bodies
+    in spurious cross-shard all-reduces, corrupting every device but the
+    first — see ``core.reuse``) instead run one single-device executable
+    per block and concatenate on the host. Zero collectives by
+    construction, and each block runs the *same* jitted program as the
+    single-device oracle, so results stay bit-identical.
+    """
+    require_vm_divisible(num_rows, mesh)
+    devices = list(mesh.devices.flat)
+    per = num_rows // len(devices)
+    return [(dev, slice(i * per, (i + 1) * per))
+            for i, dev in enumerate(devices)]
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -17,18 +17,28 @@ both halves of the fix:
   the shards overlapping the current window are resident, so peak host
   memory is O(shard + window + V·chunk) — independent of trace length.
 
-* **Double-buffered host→device prefetch** — :meth:`StreamWindow.blocks`
-  keeps two ``[V, chunk]`` blocks in flight: while the simulator consumes
-  block *k*, block *k+1* is already being ``jax.device_put`` — the
-  classic two-slot pipeline::
+* **Depth-``d`` host→device prefetch** — :meth:`StreamWindow.blocks`
+  keeps ``prefetch_depth`` ``[V, chunk]`` blocks in flight beyond the one
+  being consumed: while the simulator consumes block *k*, blocks
+  *k+1 … k+d* are already being ``jax.device_put`` — the generalized
+  pipeline (``d = 1`` is the classic double buffer)::
 
       host   : | build k | build k+1 | build k+2 |
       xfer   :      | put k | put k+1  | put k+2 |
       device :          | sim k  | sim k+1 | sim k+2 |
 
-  JAX transfers and dispatches are asynchronous, so the copy of block
-  *k+1* overlaps the simulation of block *k* instead of serializing
-  after it.
+  JAX transfers and dispatches are asynchronous, so the copies overlap
+  the simulation instead of serializing after it. ``prefetch_depth = 0``
+  (or ``prefetch=False`` on the source) disables the pipeline and yields
+  host arrays; results are bit-identical at every depth (asserted in
+  ``tests/test_trace_store.py``).
+
+* **Sharded feeding** — with ``sharding`` (a ``NamedSharding`` over a VM
+  mesh) each prefetched block is placed directly into its per-device
+  ``[V/d, chunk]`` layout, and ``pad_vms`` appends that many dead VM rows
+  (all ``addr = -1``, the exact-no-op padding contract) so the padded VM
+  count divides the mesh size. The demux itself is unchanged — the pad
+  rows never exist on the host side beyond the block builder.
 
 Both controllers accept a ``Trace``, a ``TraceStore``, or a pre-built
 ``StreamingTraceSource`` in :meth:`run` and produce **bit-identical**
@@ -57,7 +67,9 @@ class StreamWindow:
     index: int                  # window ordinal
     subs: list[Trace]           # per-VM demux (sizing / maintenance / oracle)
     chunk: int                  # datapath block width (promo/sim chunk)
-    prefetch: bool = True       # double-buffer host->device transfers
+    prefetch_depth: int = 2     # blocks in flight beyond the consumed one
+    pad_vms: int = 0            # dead VM rows appended to each block
+    sharding: object = None     # NamedSharding placing [V, chunk] per shard
 
     def chunk_lists(self) -> list[list[Trace]]:
         return [list(sub.intervals(self.chunk)) for sub in self.subs]
@@ -65,29 +77,40 @@ class StreamWindow:
     def blocks(self) -> Iterator[tuple]:
         """Yield ``(addr [V, chunk], is_write [V, chunk], kth)`` per
         datapath chunk; ``kth`` is the ragged per-VM chunk list the
-        maintenance path consumes. With ``prefetch`` the arrays arrive as
-        device buffers, put one block ahead of consumption."""
+        maintenance path consumes (real VMs only — never padded). With
+        ``prefetch_depth > 0`` the arrays arrive as device buffers, put up
+        to that many blocks ahead of consumption; with ``sharding`` each
+        transfer lands directly in the per-device row-block layout."""
         lists = self.chunk_lists()
         n_chunks = max(map(len, lists), default=0)
+        pad = [None] * self.pad_vms
 
         def host_block(k: int):
             kth = [c[k] if k < len(c) else None for c in lists]
-            a, w = pad_batch(kth, self.chunk)
+            a, w = pad_batch(kth + pad, self.chunk)
             return a, w, kth
 
-        if not self.prefetch:
+        if self.prefetch_depth <= 0:
             yield from (host_block(k) for k in range(n_chunks))
             return
-        if n_chunks == 0:
-            return
-        nxt = host_block(0)
-        nxt_dev = jax.device_put((nxt[0], nxt[1]))
-        for k in range(n_chunks):
-            cur_kth, cur_dev = nxt[2], nxt_dev
-            if k + 1 < n_chunks:    # start the next transfer before the
-                nxt = host_block(k + 1)   # consumer dispatches this block
-                nxt_dev = jax.device_put((nxt[0], nxt[1]))
-            yield cur_dev[0], cur_dev[1], cur_kth
+
+        def put(a, w):
+            if self.sharding is None:
+                return jax.device_put((a, w))
+            return jax.device_put((a, w), self.sharding)
+
+        pending: deque = deque()
+        for k in range(min(self.prefetch_depth, n_chunks)):
+            a, w, kth = host_block(k)
+            pending.append((put(a, w), kth))
+        k = len(pending)
+        while pending:
+            dev, kth = pending.popleft()
+            if k < n_chunks:        # start the next transfer before the
+                a, w, nk = host_block(k)  # consumer dispatches this block
+                pending.append((put(a, w), nk))
+                k += 1
+            yield dev[0], dev[1], kth
 
 
 @dataclasses.dataclass
@@ -141,7 +164,18 @@ class StreamingTraceSource:
     num_vms: int
     window: int
     chunk: int
-    prefetch: bool = True
+    prefetch: bool = True       # master switch (False -> host blocks)
+    prefetch_depth: int = 2     # pipeline depth when prefetch is on
+    pad_vms: int = 0            # dead VM rows appended to datapath blocks
+    sharding: object = None     # NamedSharding for per-shard placement
+
+    @property
+    def depth(self) -> int:
+        return self.prefetch_depth if self.prefetch else 0
+
+    def _window(self, i: int, subs: list[Trace]) -> StreamWindow:
+        return StreamWindow(i, subs, self.chunk, self.depth,
+                            self.pad_vms, self.sharding)
 
     def windows(self) -> Iterator[StreamWindow]:
         if isinstance(self.source, Trace):
@@ -154,8 +188,7 @@ class StreamingTraceSource:
     # -- in-memory ---------------------------------------------------------
     def _windows_from_trace(self, trace: Trace) -> Iterator[StreamWindow]:
         for i, window in enumerate(trace.intervals(self.window)):
-            yield StreamWindow(i, split_by_vm(window, self.num_vms),
-                               self.chunk, self.prefetch)
+            yield self._window(i, split_by_vm(window, self.num_vms))
 
     # -- on-disk, vm channel ----------------------------------------------
     def _windows_from_store(self, store: TraceStore) -> Iterator[StreamWindow]:
@@ -189,19 +222,19 @@ class StreamingTraceSource:
                         np.concatenate([p[1] for p in parts]),
                         size=(np.concatenate([p[2] for p in parts])
                               if sized else None)))
-            yield StreamWindow(i, subs, self.chunk, self.prefetch)
+            yield self._window(i, subs)
 
     # -- on-disk, no vm channel (single-stream convention) -----------------
     def _windows_from_vmless_store(self, store) -> Iterator[StreamWindow]:
         # mirrors the controllers' Trace(vm=None) convention: every VM
         # sees the whole window
         for i, window in enumerate(store.iter_windows(self.window)):
-            yield StreamWindow(i, [window] * self.num_vms, self.chunk,
-                               self.prefetch)
+            yield self._window(i, [window] * self.num_vms)
 
 
 def window_source(trace, num_vms: int, window: int, chunk: int,
-                  prefetch: bool = True) -> StreamingTraceSource:
+                  prefetch: bool = True, prefetch_depth: int = 2,
+                  pad_vms: int = 0, sharding=None) -> StreamingTraceSource:
     """Normalize any accepted trace input into a StreamingTraceSource.
 
     ``trace`` may be an in-memory :class:`Trace`, an on-disk
@@ -209,8 +242,11 @@ def window_source(trace, num_vms: int, window: int, chunk: int,
     (re-parameterized to the controller's intervals)."""
     if isinstance(trace, StreamingTraceSource):
         return dataclasses.replace(trace, num_vms=num_vms, window=window,
-                                   chunk=chunk, prefetch=prefetch)
+                                   chunk=chunk, prefetch=prefetch,
+                                   prefetch_depth=prefetch_depth,
+                                   pad_vms=pad_vms, sharding=sharding)
     if not isinstance(trace, (Trace, TraceStore)):
         raise TypeError(f"expected Trace, TraceStore or "
                         f"StreamingTraceSource, got {type(trace).__name__}")
-    return StreamingTraceSource(trace, num_vms, window, chunk, prefetch)
+    return StreamingTraceSource(trace, num_vms, window, chunk, prefetch,
+                                prefetch_depth, pad_vms, sharding)

@@ -262,11 +262,11 @@ def test_parser_int32_overflow_rejected():
 # controllers: streamed == in-memory, bit for bit
 # ---------------------------------------------------------------------------
 
-def _etica(batched=True, prefetch=True):
+def _etica(batched=True, prefetch=True, prefetch_depth=2):
     cfg = EticaConfig(dram_capacity=60, ssd_capacity=120, geometry_dram=GEO,
                       geometry_ssd=GEO, resize_interval=1500,
                       promo_interval=500, mode="full", batched=batched,
-                      prefetch=prefetch)
+                      prefetch=prefetch, prefetch_depth=prefetch_depth)
     return EticaCache(cfg, 3)
 
 
@@ -283,6 +283,22 @@ def test_etica_streamed_equals_in_memory(tmp_path):
         assert res_mem[v].stats == res_seq[v].stats, v
         assert np.array_equal(res_mem[v].alloc_history,
                               res_str[v].alloc_history)
+
+
+def test_etica_streamed_prefetch_depths_bit_identical(tmp_path):
+    """The depth-d host->device pipeline never changes results: streamed
+    Stats at depths 0 (host arrays), 1 (classic double buffer) and 2
+    (default) are bit-identical."""
+    trace = _mixed_trace(reqs=2000)
+    store = TraceStore.from_trace(tmp_path / "s", trace, shard_size=777)
+    ref = _etica(prefetch_depth=0).run(TraceStore.open(tmp_path / "s"))
+    for depth in (1, 2):
+        res = _etica(prefetch_depth=depth).run(
+            TraceStore.open(tmp_path / "s"))
+        for v in range(3):
+            assert ref[v].stats == res[v].stats, (depth, v)
+            assert np.array_equal(ref[v].alloc_history,
+                                  res[v].alloc_history), (depth, v)
 
 
 def test_eci_streamed_equals_in_memory(tmp_path):

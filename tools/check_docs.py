@@ -228,6 +228,39 @@ def check_observability_docs() -> list[str]:
     return problems
 
 
+def check_sharding_docs() -> list[str]:
+    problems = []
+    if not (ROOT / "src/repro/launch/mesh.py").exists():
+        problems.append("src/repro/launch/mesh.py missing (docs describe "
+                        "the VM-axis sharding layer)")
+    if not (ROOT / "tests/test_sharding.py").exists():
+        problems.append("tests/test_sharding.py missing (docs promise the "
+                        "sharded bit-identity / no-collective tests)")
+    readme = (ROOT / "README.md").read_text()
+    if "launch/mesh.py" not in readme:
+        problems.append("README.md: module map does not name "
+                        "launch/mesh.py")
+    arch = ROOT / "docs" / "architecture.md"
+    if arch.exists():
+        text = arch.read_text()
+        if "## Sharded consolidation" not in text:
+            problems.append("docs/architecture.md: no 'Sharded "
+                            "consolidation' section")
+        for needle, what in (
+                ("make_vm_mesh", "the VM mesh builder"),
+                ("aggregate_stats_sharded", "the one intended collective"),
+                ("device_row_blocks", "the manual per-device dispatch")):
+            if needle not in text:
+                problems.append(f"docs/architecture.md: {what} "
+                                f"({needle}) is not documented")
+        targets = set(LINK_RE.findall(text))
+        for mod in ("launch/mesh.py", "tests/test_sharding.py"):
+            if not any(t.endswith(mod) for t in targets):
+                problems.append(f"docs/architecture.md: sharding file "
+                                f"{mod} is not linked")
+    return problems
+
+
 def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     problems: list[str] = []
@@ -243,6 +276,7 @@ def main() -> int:
     problems.extend(check_serving_docs())
     problems.extend(check_cleaning_docs())
     problems.extend(check_observability_docs())
+    problems.extend(check_sharding_docs())
     for p in problems:
         print(f"FAIL: {p}", file=sys.stderr)
     if not problems:
